@@ -1,0 +1,54 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (one per
+measured configuration); ``derived`` carries the figure-level quantity
+(final training cost, accuracy, rounds-to-target, ...).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.data import partition, synthetic  # noqa: E402
+
+# Paper §VI scale: N=60000, I=10, K=784, J=128, L=10, T=100.
+N_TRAIN = 60000
+N_TEST = 10000
+NUM_CLIENTS = 10
+ROUNDS = 100
+SEEDS = (0, 1, 2)      # paper averages 100 runs; we average 3 (CPU budget)
+
+_cache = {}
+
+
+def dataset():
+    if "data" not in _cache:
+        _cache["data"] = synthetic.classification_dataset(
+            n_train=N_TRAIN, n_test=N_TEST, seed=0)
+    return _cache["data"]
+
+
+def fed_partition():
+    if "part" not in _cache:
+        _cache["part"] = partition.iid(N_TRAIN, NUM_CLIENTS, seed=0)
+    return _cache["part"]
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.time()
+    out = fn(*args, **kwargs)
+    return out, (time.time() - t0) * 1e6
+
+
+def mean_history(histories, field):
+    rows = [getattr(h, field) for h in histories]
+    return np.mean(np.asarray(rows), axis=0)

@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels only run in interpret mode (not
+representative), so the timed comparison is between the *fused jnp
+formulation* the kernel implements and the unfused 4-pass update — the
+bandwidth argument the ssca_update kernel encodes.  Derived: modeled
+HBM-bytes ratio (the TPU-side speedup bound).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import ssca
+from repro.core.schedules import PowerLaw
+from repro.kernels import ref
+
+
+def bench(fn, *args, iters=20):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main() -> None:
+    d = 1 << 22   # 4M params ≈ the paper's MLP ×40; CPU-sized
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+    w, lin, g, beta = (jax.random.normal(k, (d // 128, 128)) for k in ks)
+    scal = jnp.asarray([0.5, 0.3, 0.1, 1e-3], jnp.float32)
+
+    fused = jax.jit(ref.ssca_update_2d)
+    us_fused = bench(fused, w, lin, g, beta, scal)
+
+    hp = ssca.SSCAHyperParams(tau=0.1, lam=1e-3, rho=PowerLaw(0.5, 1e-9),
+                              gamma=PowerLaw(0.3, 1e-9))
+
+    def unfused(w, lin, g, beta):
+        st = ssca.SSCAState(step=jnp.asarray(1), lin={"w": lin},
+                            beta={"w": beta})
+        p, st2 = ssca.server_update(st, {"w": w}, {"w": g}, hp)
+        return p["w"], st2.lin["w"], st2.beta["w"]
+
+    us_unfused = bench(jax.jit(unfused), w, lin, g, beta)
+
+    # modeled HBM traffic: fused reads 4 + writes 3 tensors; unfused
+    # (14),(13),(16),(4) as separate passes: reads 4+2+2+2, writes 1+1+1+1.
+    ratio = (4 + 2 + 2 + 2 + 4) / (4 + 3)
+    emit("kernel/ssca_update_fused", us_fused,
+         f"modeled_hbm_ratio={ratio:.2f}x")
+    emit("kernel/ssca_update_unfused", us_unfused,
+         f"cpu_speedup={us_unfused / max(us_fused, 1e-9):.2f}x")
+
+    # flash attention: jnp chunked (the model path the kernel replaces)
+    from repro.models import attention
+    q = jax.random.normal(ks[0], (1, 2048, 4, 64))
+    k = jax.random.normal(ks[1], (1, 2048, 2, 64))
+    v = jax.random.normal(ks[2], (1, 2048, 2, 64))
+    us_full = bench(jax.jit(lambda a, b, c: attention.attend(a, b, c)),
+                    q, k, v)
+    us_chunk = bench(jax.jit(
+        lambda a, b, c: attention.attend_chunked(a, b, c, chunk=256)),
+        q, k, v)
+    emit("kernel/attend_full_2k", us_full, "materialized S^2")
+    emit("kernel/attend_chunked_2k", us_chunk,
+         f"flash-pattern, mem O(S*chunk)")
+
+
+if __name__ == "__main__":
+    main()

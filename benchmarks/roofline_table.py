@@ -1,0 +1,62 @@
+"""Roofline table over the dry-run records (assignment deliverable g).
+
+Reads EXPERIMENTS/dryrun/*.json and prints per (arch × shape × mesh): the
+three roofline terms, the dominant bottleneck, per-device memory, and the
+MODEL_FLOPS/HLO_FLOPS useful fraction.  Also emits the markdown table used
+by EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.launch.roofline import fmt_seconds
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load(dryrun_dir="EXPERIMENTS/dryrun", mesh="16x16"):
+    rows = []
+    for p in sorted(Path(dryrun_dir).glob(f"*__{mesh}.json")):
+        rows.append(json.loads(p.read_text()))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | GiB/dev | t_comp | t_mem | t_coll | dominant "
+           "| useful_flops |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['per_device_total_gib']:.1f} "
+            f"| {fmt_seconds(rl['t_compute_s'])} "
+            f"| {fmt_seconds(rl['t_memory_s'])} "
+            f"| {fmt_seconds(rl['t_collective_s'])} "
+            f"| {rl['dominant']} "
+            f"| {r['useful_flop_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+def main(dryrun_dir: str = "EXPERIMENTS/dryrun") -> None:
+    rows = load(dryrun_dir)
+    if not rows:
+        print("roofline/none,0.0,run `python -m repro.launch.dryrun` first")
+        return
+    for r in rows:
+        rl = r["roofline"]
+        step_s = max(rl["t_compute_s"], rl["t_memory_s"],
+                     rl["t_collective_s"])
+        emit(f"roofline/{r['arch']}/{r['shape']}", step_s * 1e6,
+             f"dom={rl['dominant']} useful={r['useful_flop_fraction']:.2f} "
+             f"gib={r['memory']['per_device_total_gib']}")
+    out = Path(dryrun_dir).parent / "roofline_table.md"
+    out.write_text(markdown_table(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

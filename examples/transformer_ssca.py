@@ -1,0 +1,76 @@
+"""Beyond the paper: the SSCA server optimizer on an assigned architecture.
+
+Runs ~200 training steps of a reduced llama3-8b (same family/wiring,
+2 layers) on a synthetic token stream with Algorithm 1 as the optimizer —
+the exact train_step the 256-chip dry-run lowers — and the FedSGD baseline
+for comparison.  This is deliverable (b)'s end-to-end driver at CPU scale;
+``python -m repro.launch.train --arch <id> --full`` is the cluster entry.
+
+    PYTHONPATH=src python examples/transformer_ssca.py [--arch yi-9b]
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.configs.base import reduced  # noqa: E402
+from repro.core import ssca  # noqa: E402
+from repro.core.schedules import PowerLaw  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.train import batch_stream  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+
+def run(cfg, optimizer: str, n_steps: int, batch: int, seq: int):
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    if optimizer == "ssca":
+        # LM-scale tuning: τ=2.0 gives an effective early step ργ/2τ ≈ 0.2
+        # (the paper's τ=0.1 is tuned for its 784-dim MLP; τ is "any
+        # positive constant" per the paper)
+        hp = ssca.SSCAHyperParams(tau=2.0, rho=PowerLaw(0.9, 0.3),
+                                  gamma=PowerLaw(0.9, 0.35))
+        step_fn = jax.jit(steps.make_train_step(model, hp))
+        state = ssca.init(params, with_beta=False)
+    else:
+        step_fn = jax.jit(steps.make_sgd_train_step(model,
+                                                    PowerLaw(0.1, 0.5)))
+        state = jax.numpy.asarray(1, jax.numpy.int32)
+    stream = batch_stream(cfg, batch, seq, seed=1)
+    losses = []
+    for t in range(1, n_steps + 1):
+        params, state, m = step_fn(params, state, next(stream))
+        losses.append(float(m["loss"]))
+        if t % 25 == 0:
+            print(f"  [{optimizer}] step {t:4d}: "
+                  f"loss {np.mean(losses[-25:]):.4f}")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    n = None
+    print(f"training reduced {args.arch} "
+          f"({cfg.num_layers}L d={cfg.d_model}) with SSCA vs FedSGD")
+    l_ssca = run(cfg, "ssca", args.steps, args.batch, args.seq)
+    l_sgd = run(cfg, "fedsgd", args.steps, args.batch, args.seq)
+    print(f"\nfinal 25-step mean loss: "
+          f"SSCA {np.mean(l_ssca[-25:]):.4f}  "
+          f"FedSGD {np.mean(l_sgd[-25:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

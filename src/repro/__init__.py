@@ -1,0 +1,8 @@
+"""repro — Sample-based Federated Learning via Mini-batch SSCA (Ye & Cui 2021)
+
+A production-grade JAX framework whose first-class server-optimizer strategy
+is the paper's mini-batch SSCA (Algorithms 1 and 2), validated on the paper's
+own MLP application and scaled to 10 assigned architectures on a multi-pod
+TPU mesh.
+"""
+__version__ = "1.0.0"

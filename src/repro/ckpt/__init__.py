@@ -1,0 +1,1 @@
+"""Sharded-pytree checkpointing (numpy-archive based, host-local)."""

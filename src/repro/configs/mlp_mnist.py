@@ -1,0 +1,5 @@
+"""The paper's own Section-V model: 784 -> 128 swish -> 10 softmax,
+N=60000 samples over I=10 clients (MNIST replaced by the synthetic
+dataset; see DESIGN.md assumption 1)."""
+K, J, L = 784, 128, 10
+N, I = 60000, 10

@@ -1,0 +1,13 @@
+"""Core of the reproduction: mini-batch SSCA federated optimization.
+
+Public surface:
+
+* :mod:`repro.core.schedules` — stepsize laws (3)/(5) and the paper's
+  Section-VI tunings.
+* :mod:`repro.core.ssca` — Algorithm 1 (unconstrained) as a generic
+  pytree server-optimizer.
+* :mod:`repro.core.constrained` — Algorithm 2 (exact penalty) with the
+  Lemma-1 closed form and a generic dual solver.
+* :mod:`repro.core.fedavg` — the SGD-based baselines [3]-[5].
+"""
+from repro.core import constrained, fedavg, schedules, ssca  # noqa: F401

@@ -1,0 +1,212 @@
+"""Algorithm 2 — mini-batch SSCA for constrained federated optimization.
+
+Implements the paper's Section IV: the exact-penalty transformed Problem 4,
+the per-round convex approximate Problem 5, and two solvers for it:
+
+1. ``solve_lemma1`` — the paper's closed form (Lemma 1, eqs. (21)–(23)) for
+   the Section V-B instance:  min ‖ω‖² + c·s  s.t. ⟨B, ω⟩ + τ‖ω‖² + A − U ≤ s,
+   s ≥ 0, where B stacks the (B_{j,k}, C_{l,j}) coefficients.
+2. ``solve_dual`` — a generic projected-dual-ascent solver for M ≥ 1
+   quadratic constraint surrogates sharing the Hessian 2τI with a quadratic
+   objective surrogate; every inner minimization is closed form, the dual is
+   concave, and the multipliers live in [0, c]^M (the exact-penalty box).
+   This is the "conventional convex optimization" the paper appeals to,
+   specialised to the structure that surrogate (6)/(8) always produces.
+
+Surrogate recursions: the objective uses ``lin0`` exactly as Algorithm 1;
+each constraint m keeps a linear coefficient ``lin_m`` (eq. (7) ⇒ (14)-like)
+and a *constant* scalar ``A_m`` (eq. (20) generalized):
+
+    A_m^t = (1 − ρ^t) A_m^{t−1} + ρ^t ( f_m(ω^t) − ⟨ĝ_m^t, ω^t⟩ + τ‖ω^t‖² )
+
+so that  F̄_m^t(ω) = ⟨lin_m^t, ω⟩ + τ‖ω‖² + A_m^t  (the value surrogate —
+note constraints need value tracking, unlike the objective).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ssca
+from repro.core.schedules import PowerLaw
+
+PyTree = Any
+
+
+class ConstrainedHyperParams(NamedTuple):
+    tau: float = 0.1
+    c: float = 1e5              # exact-penalty weight (paper uses 1e5)
+    rho: PowerLaw = PowerLaw(0.9, 0.3)
+    gamma: PowerLaw = PowerLaw(0.9, 0.35)
+    dual_iters: int = 50        # for the generic solver
+    dual_lr: float = 0.5
+
+
+class ConstrainedState(NamedTuple):
+    step: jnp.ndarray
+    lin_c: PyTree        # linear coefficients of the constraint surrogate(s):
+                         # a pytree like params, with a leading axis of size M
+                         # on every leaf (M = number of constraints)
+    a_c: jnp.ndarray     # (M,) constant terms A_m^t
+    slack: jnp.ndarray   # (M,) last solved slack s^t (diagnostic/Theorem 2)
+
+
+def init(params: PyTree, num_constraints: int = 1) -> ConstrainedState:
+    lin = jax.tree.map(
+        lambda w: jnp.zeros((num_constraints,) + w.shape, w.dtype), params)
+    return ConstrainedState(step=jnp.asarray(1, jnp.int32), lin_c=lin,
+                            a_c=jnp.zeros((num_constraints,), jnp.float32),
+                            slack=jnp.zeros((num_constraints,), jnp.float32))
+
+
+def _dot(a: PyTree, b: PyTree) -> jnp.ndarray:
+    # axis-less reductions (not vdot) keep sharded leaves shard-local
+    return sum(jnp.sum(x * y) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _sq(a: PyTree) -> jnp.ndarray:
+    return sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(a))
+
+
+def update_constraint_surrogate(
+        state: ConstrainedState, params: PyTree,
+        cons_vals: jnp.ndarray,      # (M,) aggregated batch values f_m(ω^t)
+        cons_grads: PyTree,          # like lin_c: stacked ĝ_m^t
+        tau: float, rho) -> ConstrainedState:
+    """Recursions (7)/(14)/(20) for every constraint m."""
+    lin_new = jax.tree.map(
+        lambda g, w: g - 2.0 * tau * w[None], cons_grads, params)
+    lin_c = ssca.ema(state.lin_c, lin_new, rho)
+    # Ā_m = f_m(ω) − ⟨ĝ_m, ω⟩ + τ‖ω‖²   (constant term of surrogate (8))
+    g_dot_w = jnp.stack([
+        sum(jnp.vdot(g[m], w) for g, w in
+            zip(jax.tree.leaves(cons_grads), jax.tree.leaves(params))).real
+        for m in range(cons_vals.shape[0])])
+    a_bar = cons_vals - g_dot_w + tau * _sq(params)
+    a_c = (1.0 - rho) * state.a_c + rho * a_bar
+    return state._replace(lin_c=lin_c, a_c=a_c)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1 closed form (Section V-B: objective ‖ω‖², single constraint)
+# ---------------------------------------------------------------------------
+
+def solve_lemma1(lin_c: PyTree, a_t, limit_u, tau: float, c: float):
+    """Closed-form (ω̄, s, ν) of problem (19) per Lemma 1 / eqs. (21)–(23).
+
+    ``lin_c`` here is the *single* constraint's linear coefficient pytree
+    (no leading M axis).  Returns the minimizer, the implied slack and the
+    multiplier ν.
+    """
+    b = _sq(lin_c)  # eq. (23): Σ B² + Σ C²
+    disc = b + 4.0 * tau * (limit_u - a_t)
+    nu_interior = (jnp.sqrt(b / jnp.maximum(disc, 1e-30)) - 1.0) / tau
+    nu = jnp.where(disc > 0.0, jnp.clip(nu_interior, 0.0, c), c)
+    omega_bar = jax.tree.map(lambda bb: -nu * bb / (2.0 * (1.0 + nu * tau)),
+                             lin_c)
+    # slack = [F̄(ω̄) + A − U]_+  (complementarity: s = max(0, violation))
+    fbar = _dot(lin_c, omega_bar) + tau * _sq(omega_bar) + a_t - limit_u
+    s = jnp.maximum(fbar, 0.0)
+    return omega_bar, s, nu
+
+
+# ---------------------------------------------------------------------------
+# Generic dual solver for Problem 5 with quadratic surrogates
+# ---------------------------------------------------------------------------
+
+def solve_dual(lin0: PyTree, beta: PyTree, lam_obj: float,
+               obj_quad: float,
+               lin_c: PyTree, a_c: jnp.ndarray, tau: float,
+               c: float, iters: int = 50, lr: float = 0.5):
+    """Projected dual ascent on ν ∈ [0, c]^M for Problem 5.
+
+    Primal:  min_ω  ⟨lin0 + 2λβ, ω⟩ + obj_quad·‖ω‖²  + c Σ s_m
+             s.t.   ⟨lin_m, ω⟩ + τ‖ω‖² + A_m ≤ s_m,  s_m ≥ 0.
+
+    With multiplier ν_m ∈ [0, c] (the s_m subproblem caps ν at c), the inner
+    minimizer is closed form:
+
+        ω(ν) = −(lin0 + 2λβ + Σ_m ν_m lin_m) / (2 (obj_quad + τ Σ_m ν_m))
+
+    and the dual function's gradient is the constraint violation at ω(ν).
+    """
+    m = a_c.shape[0]
+    base = jax.tree.map(lambda l, bt: l + 2.0 * lam_obj * bt, lin0, beta) \
+        if lam_obj else lin0
+
+    def omega_of(nu):
+        denom = 2.0 * (obj_quad + tau * jnp.sum(nu))
+        return jax.tree.map(
+            lambda b0, bc: -(b0 + jnp.tensordot(nu, bc, axes=1)) / denom,
+            base, lin_c)
+
+    def violation(nu):
+        w = omega_of(nu)
+        sq = _sq(w)
+        lin_dot = jnp.stack([
+            sum(jnp.vdot(bc[i], ww) for bc, ww in
+                zip(jax.tree.leaves(lin_c), jax.tree.leaves(w))).real
+            for i in range(m)])
+        return lin_dot + tau * sq + a_c
+
+    def body(i, nu):
+        g = violation(nu)
+        step = lr / jnp.sqrt(1.0 + i.astype(jnp.float32))
+        return jnp.clip(nu + step * g, 0.0, c)
+
+    nu = jax.lax.fori_loop(0, iters, body, jnp.full((m,), 0.5 * c))
+    w = omega_of(nu)
+    s = jnp.maximum(violation(nu), 0.0)
+    return w, s, nu
+
+
+# ---------------------------------------------------------------------------
+# Full Algorithm 2 round (Section V-B instance, generic model)
+# ---------------------------------------------------------------------------
+
+def round_fn(cost_fn: Callable[[PyTree, Any], jnp.ndarray],
+             limit_u: float, hp: ConstrainedHyperParams,
+             aggregate=None):
+    """One Algorithm-2 round for  min ‖ω‖²  s.t.  cost(ω) ≤ U   (eq. (18)).
+
+    ``cost_fn(params, batch)`` is the mini-batch estimate of F(ω); its value
+    and gradient form the client upload ``q1`` (q0 needs no upload here —
+    the objective ‖ω‖² is known to the server).
+    """
+    vg = jax.value_and_grad(cost_fn)
+
+    def one_round(params, state: ConstrainedState, batch, weight=1.0):
+        t = state.step.astype(jnp.float32)
+        rho, gamma = hp.rho(t), hp.gamma(t)
+        val, grad = vg(params, batch)
+        val = val * weight
+        grad = jax.tree.map(lambda g: g * weight, grad)
+        if aggregate is not None:
+            val, grad = aggregate((val, grad))
+        grads = jax.tree.map(lambda g: g[None], grad)     # stack M=1
+        # A^t tracks the constant of F's surrogate; U is subtracted at solve
+        # time, exactly like the paper's (19) which uses "A^t − U".
+        state = update_constraint_surrogate(
+            state, params, jnp.reshape(val, (1,)), grads, hp.tau, rho)
+        lin1 = jax.tree.map(lambda l: l[0], state.lin_c)
+        omega_bar, s, nu = solve_lemma1(lin1, state.a_c[0], limit_u,
+                                        hp.tau, hp.c)
+        new_params = jax.tree.map(
+            lambda w, wb: (1.0 - gamma) * w + gamma * wb, params, omega_bar)
+        new_state = state._replace(step=state.step + 1, slack=s[None])
+        return new_params, new_state
+
+    return one_round
+
+
+def penalty_continuation(c_schedule: Sequence[float]):
+    """The practical c_j ↑ ∞ loop after Theorem 2: repeat Algorithm 2 with
+    increasing penalty until ‖s*‖ is small.  Returns the c sequence used —
+    the driver in ``repro.fed.runtime`` consumes it."""
+    cs = list(c_schedule)
+    if any(c2 <= c1 for c1, c2 in zip(cs, cs[1:])):
+        raise ValueError("Theorem 2 requires 0 < c_j < c_{j+1}")
+    return cs

@@ -1,0 +1,87 @@
+"""SGD-based federated baselines the paper compares against ([3]–[5]).
+
+* **FedSGD** — E = 1: each client computes one mini-batch gradient; the
+  server averages (weighted by N_i/N) and takes an SGD step.  Identical
+  per-round communication to Algorithm 1.
+* **FedAvg** [3] — E > 1: each client runs E local SGD steps from the
+  current global model; the server averages the resulting models.
+* **Parallel-restarted SGD** [5] — FedAvg with all clients participating
+  and a common decaying learning rate (the form analysed in [5]); provided
+  as a named alias with the restart interval E.
+
+All are pure-functional: ``round(params, batches, t) -> params``.  ``batches``
+carries a leading client axis so the local loops vmap across clients.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import PowerLaw
+
+PyTree = Any
+
+
+class SGDHyperParams(NamedTuple):
+    lr: PowerLaw = PowerLaw(0.1, 0.5)   # r = ā / t^ᾱ, grid-searched in §VI
+    local_steps: int = 1                # E
+    momentum: float = 0.0
+
+
+def fedsgd_round(loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+                 hp: SGDHyperParams):
+    """E = 1 baseline: aggregate weighted grads, one SGD step."""
+    grad_fn = jax.grad(loss_fn)
+
+    def one_round(params, batch, t, weight=1.0, aggregate=None):
+        g = jax.tree.map(lambda x: x * weight, grad_fn(params, batch))
+        if aggregate is not None:
+            g = aggregate(g)
+        lr = hp.lr(t)
+        return jax.tree.map(lambda w, gg: w - lr * gg, params, g)
+
+    return one_round
+
+
+def fedavg_round(loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+                 hp: SGDHyperParams):
+    """FedAvg [3]: per-client E local SGD(+momentum) steps, then weighted
+    model average.
+
+    ``client_batches`` has a leading axis (I, E, ...) — one E-sequence of
+    mini-batches per client; ``client_weights`` is (I,) with Σ = 1 (N_i/N).
+    """
+    from repro import optim
+
+    grad_fn = jax.grad(loss_fn)
+
+    def local_update(params, batches_e, lr):
+        init, update = (optim.momentum(lambda t: lr, hp.momentum)
+                        if hp.momentum else optim.sgd(lambda t: lr))
+        st0 = init(params)
+
+        def step(carry, b):
+            p, st = carry
+            g = grad_fn(p, b)
+            p, st = update(g, st, p)
+            return (p, st), 0.0
+
+        (out, _), _ = jax.lax.scan(step, (params, st0), batches_e)
+        return out
+
+    def one_round(params, client_batches, client_weights, t):
+        lr = hp.lr(t)
+        locals_ = jax.vmap(lambda be: local_update(params, be, lr))(
+            client_batches)
+        return jax.tree.map(
+            lambda ws: jnp.tensordot(client_weights, ws, axes=1), locals_)
+
+    return one_round
+
+
+def prsgd_round(loss_fn, hp: SGDHyperParams):
+    """Parallel-restarted SGD [5] == FedAvg with full participation and a
+    common decaying lr; alias kept so benchmarks can name it."""
+    return fedavg_round(loss_fn, hp)

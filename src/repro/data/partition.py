@@ -1,0 +1,74 @@
+"""Federated partitioners — split a dataset over I clients by sample (the
+paper's horizontal/sample-based setting, Section II).
+
+Partitions are disjoint, cover all of N, and record N_i so that the
+aggregation weights N_i/(B·N) of eqs. (2)/(7) are exact.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+import numpy as np
+
+
+class Partition(NamedTuple):
+    indices: List[np.ndarray]   # per-client sample indices, disjoint
+    sizes: np.ndarray           # N_i, (I,)
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.indices)
+
+    @property
+    def total(self) -> int:
+        return int(self.sizes.sum())
+
+    def weights(self, batch_size: int) -> np.ndarray:
+        """N_i / (B·N) of eq. (2)."""
+        return (self.sizes / (batch_size * self.total)).astype(np.float32)
+
+
+def iid(n: int, num_clients: int, seed: int = 0) -> Partition:
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    chunks = np.array_split(perm, num_clients)
+    return Partition([c.copy() for c in chunks],
+                     np.asarray([len(c) for c in chunks], np.int64))
+
+
+def dirichlet(labels: np.ndarray, num_clients: int, alpha: float = 0.5,
+              seed: int = 0, min_size: int = 1) -> Partition:
+    """Label-skewed non-IID split (standard Dirichlet protocol).
+
+    ``labels``: (N,) integer class labels.  Smaller alpha ⇒ more skew —
+    this is the heterogeneity regime where FedAvg with E>1 degrades (the
+    paper's §I motivation for one-shot aggregation per round).
+    """
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    while True:
+        idx_per_client: List[list] = [[] for _ in range(num_clients)]
+        for c in range(n_classes):
+            idx_c = np.where(labels == c)[0]
+            rng.shuffle(idx_c)
+            props = rng.dirichlet([alpha] * num_clients)
+            cuts = (np.cumsum(props) * len(idx_c)).astype(int)[:-1]
+            for i, part in enumerate(np.split(idx_c, cuts)):
+                idx_per_client[i].extend(part.tolist())
+        if min(len(ix) for ix in idx_per_client) >= min_size:
+            break
+    indices = [np.asarray(sorted(ix), np.int64) for ix in idx_per_client]
+    return Partition(indices,
+                     np.asarray([len(ix) for ix in indices], np.int64))
+
+
+def sample_minibatches(partition: Partition, batch_size: int, round_idx: int,
+                       seed: int = 0) -> np.ndarray:
+    """Each client's uniformly random mini-batch N_i^(t); (I, B) indices."""
+    out = np.empty((partition.num_clients, batch_size), np.int64)
+    for i, idx in enumerate(partition.indices):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, round_idx, i]))
+        out[i] = rng.choice(idx, size=batch_size,
+                            replace=len(idx) < batch_size)
+    return out

@@ -1,0 +1,1 @@
+"""Federated runtime: single-host simulation and mesh-sharded execution."""

@@ -1,0 +1,61 @@
+"""Secure aggregation by pairwise-cancelling additive masks.
+
+The paper's §III-B security analysis argues q0 itself hides raw data when
+the message map is non-invertible, and otherwise defers to "extra privacy
+mechanisms, such as homomorphic encryption and secret sharing".  This
+module implements the standard lightweight instance of the latter
+(Bonawitz-style additive masking, honest-but-curious server, no dropout
+handling): clients i < j share a seed s_ij; client i adds PRG(s_ij) and
+subtracts PRG(s_ji); all masks cancel in the server's sum, so the server
+learns exactly Σ_i q_i — the only quantity Algorithm 1/2 need — and
+nothing about any individual q_i.
+
+Seeds are derived from a session key here (the key-agreement transport is
+out of scope); masks are generated with jax PRNG so the whole round stays
+jittable.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _pair_key(session_key, i: int, j: int):
+    return jax.random.fold_in(jax.random.fold_in(session_key, i), j)
+
+
+def _mask_like(key, tree: PyTree) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    masked = [jax.random.normal(k, l.shape, l.dtype)
+              if jnp.issubdtype(l.dtype, jnp.floating)
+              else jnp.zeros_like(l)
+              for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
+def mask_message(message: PyTree, session_key, client: int,
+                 num_clients: int, round_idx: int) -> PyTree:
+    """Client-side: message + Σ_{j>i} PRG(s_ij) − Σ_{j<i} PRG(s_ji)."""
+    rk = jax.random.fold_in(session_key, round_idx)
+    out = message
+    for j in range(num_clients):
+        if j == client:
+            continue
+        lo, hi = min(client, j), max(client, j)
+        m = _mask_like(_pair_key(rk, lo, hi), message)
+        sign = 1.0 if client == lo else -1.0
+        out = jax.tree.map(lambda x, mm: x + sign * mm, out, m)
+    return out
+
+
+def aggregate(masked_messages: List[PyTree]) -> PyTree:
+    """Server-side: the plain sum — masks cancel by construction."""
+    total = masked_messages[0]
+    for m in masked_messages[1:]:
+        total = jax.tree.map(jnp.add, total, m)
+    return total

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical layers, with interpret-mode
+validation against pure-jnp oracles (ref.py):
+
+* ``ssca_update``     — fused Algorithm-1 server round (the paper's hot path)
+* ``flash_attention`` — blocked causal GQA attention
+* ``rwkv6_wkv``       — chunked RWKV-6 WKV scan (TPU port of the CUDA kernel)
+"""
+from repro.kernels import ops, ref  # noqa: F401

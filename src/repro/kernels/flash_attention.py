@@ -1,0 +1,107 @@
+"""Blocked causal flash attention (Pallas TPU).
+
+Grid: (batch·kv_heads·groups, q_blocks, kv_blocks) — the kv axis is the
+innermost (sequential) grid dimension; running max / sum / accumulator
+live in VMEM scratch and persist across kv steps (the standard TPU
+pallas flash pattern).  Causality is enforced two ways: whole kv-blocks
+strictly above the diagonal are skipped via ``pl.when``, and the diagonal
+block is masked elementwise.
+
+Block shapes default to (128, 128) q×kv tiles — MXU-aligned on the
+contraction (head_dim is padded to 128 by the wrapper) and small enough
+that q/k/v/acc tiles fit VMEM with room for double buffering.
+
+GQA: the wrapper maps q heads to kv heads by repeating the kv index map —
+no materialized repeat of k/v in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip kv blocks strictly above the causal diagonal
+    @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # (bq, d)
+        k = k_ref[0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)[:, None]            # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)[:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret",
+                                    "scale"))
+def flash_attention_bhsd(q, k, v, scale: float, *, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = False):
+    """q: (BH, Sq, D), k/v: (BH, Sk, D), causal, Sq == Sk.
+
+    BH is the flattened batch·heads axis (GQA resolved by the wrapper).
+    D should be 128-aligned (wrapper zero-pads; pass the TRUE head_dim's
+    softmax scale).  Returns (BH, Sq, D).
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    grid = (bh, pl.cdiv(sq, block_q), pl.cdiv(sk, block_k))
+    kernel = functools.partial(_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, seq_len=sk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

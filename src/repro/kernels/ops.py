@@ -1,0 +1,130 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle arbitrary shapes (flatten + pad to lane multiples), GQA head
+mapping, and dtype plumbing.  ``interpret=True`` executes the kernel body
+in Python on CPU — the validation mode used by the test suite; on a real
+TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rwkv6_scan as _rw
+from repro.kernels import ssca_update as _su
+
+PyTree = Any
+LANES = _su.LANES
+
+
+def _pad_to(x, mult):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad),))
+    return x, n
+
+
+def ssca_update(params: PyTree, lin: PyTree, grads: PyTree, beta: PyTree,
+                *, rho, gamma, tau: float, lam: float = 0.0,
+                interpret: bool = False):
+    """Fused Algorithm-1 server update over a whole pytree.
+
+    Flattens every leaf into one (R, 128) buffer, runs the fused kernel
+    once, and unflattens.  ``beta`` may equal ``lin`` shape-wise; pass
+    ``lam=0`` to ignore it (still carried through untouched semantics-wise:
+    β' is returned updated per (13) — harmless and keeps one code path).
+    Returns (params', lin', beta').
+    """
+    leaves_w, treedef = jax.tree_util.tree_flatten(params)
+    leaves_l = jax.tree.leaves(lin)
+    leaves_g = jax.tree.leaves(grads)
+    leaves_b = jax.tree.leaves(beta)
+    sizes = [x.size for x in leaves_w]
+    shapes = [x.shape for x in leaves_w]
+    dtypes = [x.dtype for x in leaves_w]
+    f32 = jnp.float32
+
+    def flat(leaves):
+        return jnp.concatenate([x.astype(f32).reshape(-1) for x in leaves])
+
+    w, l, g, b = map(flat, (leaves_w, leaves_l, leaves_g, leaves_b))
+    w, n = _pad_to(w, LANES)
+    l, _ = _pad_to(l, LANES)
+    g, _ = _pad_to(g, LANES)
+    b, _ = _pad_to(b, LANES)
+    shape2 = (-1, LANES)
+    scalars = jnp.asarray([rho, gamma, tau, lam], f32)
+    w2, l2, b2 = _su.ssca_update_2d(
+        w.reshape(shape2), l.reshape(shape2), g.reshape(shape2),
+        b.reshape(shape2), scalars, interpret=interpret)
+
+    def unflat(v):
+        v = v.reshape(-1)[:n]
+        out, off = [], 0
+        for size, shape, dt in zip(sizes, shapes, dtypes):
+            out.append(v[off:off + size].reshape(shape).astype(dt))
+            off += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return unflat(w2), unflat(l2), unflat(b2)
+
+
+def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """Causal GQA flash attention.
+
+    q: (B, S, H, Dh); k/v: (B, S, Hkv, Dh).  Returns (B, S, H, Dh).
+    Head_dim is zero-padded to a multiple of 128 (softmax scale uses the
+    true Dh); kv heads are index-mapped to q heads without materializing
+    the GQA repeat (k/v are reshaped per kv-head and the group dim folds
+    into the batch axis of the kernel grid).
+    """
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    gsz = h // hkv
+    scale = dh ** -0.5
+    pad = (-dh) % 128
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    dp = dh + pad
+    # (B, S, Hkv, G, D) -> (B·Hkv·G, S, D); k/v broadcast over G
+    qb = q.reshape(b, s, hkv, gsz, dp).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * hkv * gsz, s, dp)
+    kb = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, hkv, gsz, s, dp)).reshape(b * hkv * gsz, s, dp)
+    vb = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, hkv, gsz, s, dp)).reshape(b * hkv * gsz, s, dp)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    o = _fa.flash_attention_bhsd(qb, kb, vb, scale, block_q=bq, block_k=bk,
+                                 interpret=interpret)
+    o = o.reshape(b, hkv, gsz, s, dp).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, s, h, dp)
+    return o[..., :dh]
+
+
+def rwkv6_wkv(r, k, v, w, u, *, chunk: int = 16, interpret: bool = False):
+    """WKV with data-dependent decay.
+
+    r/k/v/w: (B, S, H, Dh) with w ∈ (0, 1] the per-token decay; u: (H, Dh).
+    Returns (B, S, H, Dh) f32.
+    """
+    b, s, h, dh = r.shape
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-20))
+    lw = jnp.clip(lw, -5.0, 0.0)
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    rb, kb, vb, lb = map(to_bh, (r, k, v, lw))
+    ub = jnp.broadcast_to(u[None], (b, h, dh)).reshape(b * h, 1, dh)
+    o = _rw.rwkv6_wkv_bh(rb, kb, vb, lb, ub, chunk=min(chunk, s),
+                         interpret=interpret)
+    return o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every kernel — the correctness ground truth.
+
+Each function mirrors its kernel's contract exactly (same argument
+shapes/dtypes) with straightforward jnp code; tests sweep shapes and
+dtypes and assert allclose between kernel (interpret=True) and oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssca_update_2d(w, lin, g, beta, scalars):
+    rho, gamma, tau, lam = (scalars[i].astype(jnp.float32) for i in range(4))
+    wf = w.astype(jnp.float32)
+    lin_new = (1 - rho) * lin.astype(jnp.float32) \
+        + rho * (g.astype(jnp.float32) - 2 * tau * wf)
+    beta_new = (1 - rho) * beta.astype(jnp.float32) + rho * wf
+    omega_bar = -(lin_new + 2 * lam * beta_new) / (2 * tau)
+    w_new = (1 - gamma) * wf + gamma * omega_bar
+    return (w_new.astype(w.dtype), lin_new.astype(lin.dtype),
+            beta_new.astype(beta.dtype))
+
+
+def flash_attention_bhsd(q, k, v, scale):
+    """Causal softmax attention, f32 accumulation."""
+    s = jnp.einsum('bqd,bkd->bqk', q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum('bqk,bkd->bqd', p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_wkv_bh(r, k, v, lw, u):
+    """Token-by-token WKV recurrence (the definitional form):
+
+        o_t = r_t · (S_{t−1} + diag(u) k_tᵀ v_t)
+        S_t = diag(w_t) S_{t−1} + k_tᵀ v_t,   w_t = exp(lw_t)
+    """
+    f32 = jnp.float32
+    r, k, v, lw = (x.astype(f32) for x in (r, k, v, lw))
+    u = u.astype(f32)[:, 0]                      # (BH, D)
+    bh, s, d = r.shape
+
+    def per_seq(r1, k1, v1, lw1, u1):
+        def step(S, xs):
+            rt, kt, vt, lwt = xs
+            kv = jnp.outer(kt, vt)
+            o = rt @ (S + u1[:, None] * kv)
+            S = jnp.exp(lwt)[:, None] * S + kv
+            return S, o
+        _, o = jax.lax.scan(step, jnp.zeros((d, d), f32),
+                            (r1, k1, v1, lw1))
+        return o
+
+    return jax.vmap(per_seq)(r, k, v, lw, u)

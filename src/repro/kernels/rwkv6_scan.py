@@ -1,0 +1,92 @@
+"""Chunked RWKV-6 WKV scan (Pallas TPU).
+
+TPU adaptation of the paper's CUDA wkv6 kernel: instead of one thread per
+channel stepping token-by-token (warp-level parallelism that has no TPU
+analogue), the sequence is processed in chunks — within a chunk the
+token-token interaction is a small masked matmul chain (MXU work), and the
+(Dk × Dv) state is carried in VMEM scratch across the chunk grid steps
+(sequential innermost dimension), never touching HBM.
+
+Grid: (B·H, n_chunks).  Refs are blocked (1, chunk, D); the decay comes in
+as per-token log-decay (clamped, see repro.models.rwkv6) so in-chunk
+cumulative products are exp(cumsum) — numerically safe for chunk ≤ 16 with
+the −5 floor.
+
+State update per chunk (derived in repro.models.rwkv6.wkv_chunked):
+
+    S ← diag(exp(Σ lw)) S + Σ_j (k_j · exp(Σ_{m>j} lw_m))ᵀ v_j
+    o_t = r_t·exp(cum_excl_t) · S_in  +  in-chunk masked attention + bonus
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
+            chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)       # (T, Dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)       # (T, Dv)
+    lw = lw_ref[0].astype(jnp.float32)     # (T, Dk) log-decay ≤ 0
+    u = u_ref[0].astype(jnp.float32)       # (1, Dk) bonus
+
+    cum = jnp.cumsum(lw, axis=0)           # inclusive
+    cum_excl = cum - lw
+    total = cum[-1:]                       # (1, Dk)
+
+    s_in = s_ref[...]                      # (Dk, Dv)
+    r_dec = r * jnp.exp(cum_excl)
+    o_carry = jax.lax.dot_general(r_dec, s_in, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    att = jax.lax.dot_general(r_dec, k * jnp.exp(-cum),
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (T, T)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(tj < ti, att, 0.0)     # strictly lower triangular
+    bonus = jnp.sum(r * u * k, axis=1)[:, None]          # (T, 1)
+    o = o_carry + jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32) \
+        + bonus * v
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    k_dec = k * jnp.exp(total - cum)
+    s_ref[...] = s_in * jnp.exp(total).T + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv_bh(r, k, v, lw, u, *, chunk: int = 16,
+                 interpret: bool = False):
+    """r/k/v/lw: (BH, S, D); u: (BH, 1, D).  Returns o (BH, S, D) f32.
+
+    ``lw`` is per-token log-decay (≤ 0, clamped ≥ −5).  S % chunk == 0.
+    """
+    bh, s, d = r.shape
+    if s % chunk:
+        raise ValueError(f"S={s} % chunk={chunk} != 0")
+    grid = (bh, s // chunk)
+    blk = pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0))
+    ublk = pl.BlockSpec((1, 1, d), lambda b, c: (b, 0, 0))
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk, blk, blk, blk, ublk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u)

@@ -1,0 +1,1 @@
+"""Distribution layer: meshes, shardings, steps, dry-run, roofline."""

@@ -1,0 +1,119 @@
+"""Roofline-term extraction from a compiled (dry-run) artifact.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs   / (chips × 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes   / (chips × 819e9 B/s HBM)
+    collective = Σ per-class collective_bytes / (chips × 50e9 B/s ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed out of the optimized HLO text (cost_analysis does not attribute
+them): we sum the *result shapes* of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute instruction.  Result-shape
+bytes are the per-device payload for AG/AR; this is a first-order model of
+ring-collective traffic, which is what a schedule-level comparison needs.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+# tuple-result collectives: capture the tuple shape list
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-class summed result bytes of collective ops in optimized HLO."""
+    out: Dict[str, int] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # count the -start only (async pairs)
+        m = _COLL_RE.search(line)
+        tuple_m = _TUPLE_RE.search(line)
+        if tuple_m and not (m and m.group(1)):
+            op = tuple_m.group(2)
+            total = sum(_shape_bytes(dt, dims)
+                        for dt, dims in _SHAPE_RE.findall(tuple_m.group(1)))
+        elif m and m.group(1):
+            op = m.group(3)
+            total = _shape_bytes(m.group(1), m.group(2))
+        else:
+            continue
+        out[op] = out.get(op, 0) + total
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll: Dict[str, float], n_chips: int) -> dict:
+    """flops/bytes/collective bytes are per-device (from the SPMD
+    program, trip-count-multiplied by launch.hlo_cost)."""
+    coll_total = float(sum(coll.values()))
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = coll_total / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_accessed,
+        "collective_bytes_per_chip": coll_total,
+        "collective_breakdown": coll,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "n_chips": n_chips,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D tokens-FLOPs for a train step (3 passes); 2·N·D for
+    inference (forward only)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    per_token = (6 if shape.kind == "train" else 2) * n_active
+    return float(per_token) * tokens
+
+
+def useful_fraction(cfg, shape, hlo_flops_per_chip: float,
+                    n_chips: int) -> float:
+    total_hlo = hlo_flops_per_chip * n_chips
+    if total_hlo <= 0:
+        return float("nan")
+    return model_flops(cfg, shape) / total_hlo
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.0f}us"

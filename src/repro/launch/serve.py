@@ -1,0 +1,118 @@
+"""Serving driver: ``python -m repro.launch.serve --arch ID``.
+
+Batched prefill + decode against the unified Model API — the runnable
+counterpart of the decode dry-runs.  Reduced configs by default (CPU
+container); on a cluster, combine with the mesh/sharding layer exactly as
+``dryrun.lower_one`` does for the decode kind.
+
+Request model: a queue of (prompt, max_new_tokens) served in fixed-size
+batches with greedy sampling; per-request timing and aggregate
+tokens/sec are reported.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import reduced
+from repro.models import build_model
+
+
+class Request(NamedTuple):
+    prompt: np.ndarray        # (L,) int32
+    max_new: int
+
+
+def synth_requests(n: int, cfg, prompt_len: int, max_new: int,
+                   seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(rng.integers(0, cfg.vocab_size,
+                                 size=prompt_len).astype(np.int32), max_new)
+            for _ in range(n)]
+
+
+def serve_batch(model, params, requests: List[Request], *,
+                window: int = 0, frame_embeds=None):
+    cfg = model.cfg
+    b = len(requests)
+    prompt_len = max(len(r.prompt) for r in requests)
+    max_new = max(r.max_new for r in requests)
+    total = prompt_len + max_new
+    state = model.init_decode(b, total)
+    if cfg.family == "audio" and frame_embeds is not None:
+        state = model.precompute_cross(
+            params, {"frame_embeds": frame_embeds}, state)
+    prompts = jnp.asarray(np.stack([
+        np.pad(r.prompt, (0, prompt_len - len(r.prompt)))
+        for r in requests]))
+
+    step = jax.jit(model.decode_step)
+    t0 = time.time()
+    logits = None
+    for t in range(prompt_len):                      # cache-filling prefill
+        logits, state = step(params, state, prompts[:, t:t + 1])
+    t_prefill = time.time() - t0
+
+    out = []
+    tok = jnp.argmax(logits[:, :, :cfg.vocab_size], -1)
+    t0 = time.time()
+    for _ in range(max_new):
+        out.append(tok)
+        logits, state = step(params, state, tok)
+        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], -1)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    return gen, t_prefill, t_decode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    model = build_model(cfg, decode_window=args.window)
+    params = model.init(jax.random.key(0))
+    reqs = synth_requests(args.requests, cfg, args.prompt_len, args.max_new)
+
+    frame = None
+    if cfg.family == "audio":
+        frame = jax.random.normal(
+            jax.random.key(2),
+            (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+
+    done = 0
+    tput_tokens = 0
+    t_all = time.time()
+    while done < len(reqs):
+        batch = reqs[done:done + args.batch]
+        if len(batch) < args.batch:   # pad the tail batch
+            batch = batch + [batch[-1]] * (args.batch - len(batch))
+        gen, tp, td = serve_batch(model, params, batch, window=args.window,
+                                  frame_embeds=frame)
+        done += args.batch
+        tput_tokens += gen.size
+        print(f"batch done: prefill {tp:.2f}s decode {td:.2f}s "
+              f"({gen.shape[1] * gen.shape[0] / max(td, 1e-9):.1f} tok/s)")
+    dt = time.time() - t_all
+    print(f"served {min(done, len(reqs))} requests in {dt:.1f}s "
+          f"({tput_tokens / dt:.1f} generated tok/s incl. prefill)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Sharding rules: parameter/state/activation PartitionSpecs per mesh.
+
+Scheme (the paper-faithful baseline): 2-D FSDP × TP.
+
+* ``model`` axis — tensor parallelism: attention heads / ffn hidden / vocab
+  / experts.
+* ``data`` axis (and ``pod`` when present) — the federated-client axis:
+  the global batch shards over it, and parameters/SSCA-state additionally
+  shard over it FSDP-style on a non-TP dimension so optimizer state for
+  34–400 B-param models fits HBM.
+
+Rules are name-based over the stacked-parameter tree; unknown leaves
+replicate (safe default).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+PyTree = Any
+
+
+def _fsdp(mesh) -> Optional[str]:
+    return "data" if "data" in mesh.axis_names else None
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# (suffix match, rank) -> spec builder.  d = fsdp axis name, m = "model".
+# moe_fsdp_dim: which expert-weight dim carries the FSDP shard — "d"
+# (d_model; train default) or "f" (d_ff; weight-stationary decode TP).
+def _param_spec(name: str, shape: tuple, mesh, *, fsdp_params: bool = True,
+                moe_fsdp_dim: str = "d"):
+    d = _fsdp(mesh) if fsdp_params else None
+    m = "model"
+    n = name.split("/")[-1]
+    base = n[2:] if n.startswith(("d_", "m_")) else n
+    for r in range(4):
+        if base.startswith((f"r{r}_", f"a{r}_")):
+            base = base[3:]
+    rank = len(shape)
+
+    def stacked(spec):
+        """prepend None for the layer-stack axis when present."""
+        return P(*([None] * (rank - len(spec)) + list(spec)))
+
+    if base == "embed":
+        return P(m, d)
+    if base in ("wq", "wk", "wv", "xwq", "xwk", "xwv", "wg", "wu", "wi",
+                "wx", "wgate", "w_ri", "ck", "cr", "wr", "wkk", "wvv",
+                "img_proj"):
+        return stacked([d, m])
+    if base in ("wo", "xwo", "wd", "wo2", "w_out", "cv", "swd", "ewd"):
+        if base == "ewd":                       # (L, E, F, D)
+            # experts always carry a data-axis shard (they never fit
+            # model-only), even when fsdp_params=False for the rest
+            de = _fsdp(mesh)
+            return stacked([m, de, None]) if moe_fsdp_dim == "f" \
+                else stacked([m, None, de])
+        return stacked([m, d])
+    if base in ("ewg", "ewu"):                  # (L, E, D, F)
+        de = _fsdp(mesh)
+        return stacked([m, None, de]) if moe_fsdp_dim == "f" \
+            else stacked([m, de, None])
+    if base in ("swg", "swu"):
+        return stacked([d, m])
+    if base == "router":                        # (L, D, E)
+        return stacked([d, None])
+    if base in ("decay_w1",):
+        return stacked([d, None])
+    if base in ("decay_w2",):
+        return stacked([None, m])
+    if base in ("bonus", "ln_w", "ln_b"):       # (L, H, hd)
+        return stacked([m, None])
+    if base in ("wk_rwkv",):
+        return stacked([d, m])
+    # rwkv big square projections
+    if base in ("wkx",):
+        return stacked([d, m])
+    if base == "conv_w":                        # (L, W, D)
+        return stacked([None, m])
+    # everything else (norms, mixes, biases, lam, decay_base) replicates
+    return P()
+
+
+def layer_pspec_fn(mesh, *, fsdp_params: bool = True,
+                   moe_fsdp_dim: str = "d"):
+    """Per-layer (sliced, no leading stack axis) spec for a block leaf —
+    used by the model to re-pin scan-sliced layer params inside the loop
+    body so XLA cannot hoist the FSDP all-gather of the *whole stacked*
+    parameter out of the ``while`` (observed: +150 GiB on granite-34b)."""
+    def fn(name: str, shape: tuple):
+        stacked = _param_spec(name, (0,) + tuple(shape), mesh,
+                              fsdp_params=fsdp_params,
+                              moe_fsdp_dim=moe_fsdp_dim)
+        if len(stacked) > len(shape):      # drop the stack-axis entry
+            return P(*stacked[1:])
+        return stacked
+    return fn
+
+
+def param_shardings(params: PyTree, mesh, *, fsdp_params: bool = True,
+                    moe_fsdp_dim: str = "d"):
+    def one(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        spec = _param_spec(name, leaf.shape, mesh, fsdp_params=fsdp_params,
+                           moe_fsdp_dim=moe_fsdp_dim)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def state_shardings(state, params_sh, mesh):
+    """SSCA state: lin/beta like params; scalars replicated."""
+    rep = NamedSharding(mesh, P())
+    return type(state)(
+        step=rep,
+        lin=params_sh,
+        beta=None if state.beta is None else params_sh)
+
+
+def batch_shardings(cfg: ModelConfig, shape: InputShape, mesh,
+                    dp_override=None):
+    """Input specs for the train/prefill batch dict."""
+    dp = tuple(dp_override) if dp_override is not None else _dp_axes(mesh)
+    ndev = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    bspec = dp if (dp and shape.global_batch % ndev == 0) else None
+    out = {"tokens": NamedSharding(mesh, P(bspec, None))}
+    if cfg.family == "vlm":
+        out["img_embeds"] = NamedSharding(mesh, P(bspec, None, None))
+    if cfg.family == "audio":
+        out["frame_embeds"] = NamedSharding(mesh, P(bspec, None, None))
+    return out
+
+
+def decode_state_shardings(cfg: ModelConfig, shape: InputShape, mesh,
+                           state) -> Any:
+    """Decode caches: batch over data axes; head_dim over model (works for
+    every kv-head count incl. kv=1); recurrent state heads over model."""
+    dp = _dp_axes(mesh)
+    ndev = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    b = dp if (dp and shape.global_batch % ndev == 0) else None
+    m = "model"
+
+    def spec_for(path, leaf):
+        name = path[-1] if path else ""
+        name = str(getattr(name, "name", getattr(name, "key", name)))
+        if leaf.ndim == 0 or leaf.size == 0:
+            return NamedSharding(mesh, P())
+        if name in ("kv_k", "kv_v", "cross_k", "cross_v"):
+            # (n_layers, B, C, Hkv, hd) — cache shards along the SEQUENCE
+            # dim over `model`: the attention contraction over C then
+            # reduces with per-head scalar psums, and the single-slot
+            # cache write stays a masked local update.  (Sharding hd
+            # instead triggers Shardy's involuntary full rematerialization
+            # of the cache every step — observed 103 GB/step on maverick.)
+            cap = leaf.shape[2]
+            cspec = m if cap % mesh.shape["model"] == 0 else None
+            return NamedSharding(mesh, P(None, b, cspec, None, None))
+        if name == "rec_h":
+            if leaf.ndim == 5:   # rwkv wkv (L, B, H, dk, dv)
+                return NamedSharding(mesh, P(None, b, m, None, None))
+            return NamedSharding(mesh, P(None, b, m))   # rglru (L, B, D)
+        if name == "rec_conv":
+            if leaf.ndim == 4:   # (L, B, W-1, D) or rwkv shifts (L,2,B,D)
+                if cfg.family == "ssm":
+                    return NamedSharding(mesh, P(None, None, b, m))
+                return NamedSharding(mesh, P(None, b, None, m))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec_for, state)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's "data".
+
+``input_specs(cfg, shape)`` returns the batch dict for train/prefill kinds;
+``decode_specs`` additionally builds the decode-state structure.  Nothing
+here allocates device memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.transformer import Model
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                shardings: Dict[str, Any] | None = None) -> Dict[str, Any]:
+    """The batch for a train or prefill step.
+
+    * text families: tokens (B, S)
+    * vlm: image tokens are part of S — tokens (B, S − 576) + patch
+      embeddings (B, 576, D) from the stub frontend
+    * audio: decoder tokens (B, S) + encoder frame embeddings
+      (B, 1500, D) from the stub frontend
+    """
+    sh = shardings or {}
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        out["tokens"] = _sds((b, 1), jnp.int32, sh.get("tokens"))
+        return out
+    if cfg.family == "vlm":
+        out["tokens"] = _sds((b, s - cfg.num_image_tokens), jnp.int32,
+                             sh.get("tokens"))
+        out["img_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                 cfg.adtype, sh.get("img_embeds"))
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32, sh.get("tokens"))
+    if cfg.family == "audio":
+        out["frame_embeds"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                                   cfg.adtype, sh.get("frame_embeds"))
+    return out
+
+
+def param_specs(model: Model, shardings=None):
+    """Abstract parameters (no init executed)."""
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    if shardings is None:
+        return shapes
+    return jax.tree.map(
+        lambda l, s: _sds(l.shape, l.dtype, s), shapes, shardings)
+
+
+def decode_specs(model: Model, shape: InputShape, shardings=None):
+    """Abstract decode state for (arch × decode shape)."""
+    state = jax.eval_shape(
+        lambda: model.init_decode(shape.global_batch, shape.seq_len))
+    if shardings is None:
+        return state
+    return jax.tree.map(
+        lambda l, s: _sds(l.shape, l.dtype, s), state, shardings,
+        is_leaf=lambda x: x is None)

@@ -1,0 +1,121 @@
+"""End-to-end training driver: ``python -m repro.launch.train --arch ID``.
+
+Trains an assigned architecture (reduced by default — this container is a
+single CPU core; pass ``--full`` only on a real cluster) with the paper's
+mini-batch SSCA as the server optimizer, or ``--optimizer fedsgd`` for the
+first-order baseline.  Supports checkpoint save/restore.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import io as ckpt_io
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import reduced
+from repro.core import ssca
+from repro.core.schedules import PowerLaw
+from repro.data import synthetic
+from repro.launch import steps
+from repro.models import build_model
+
+
+def batch_stream(cfg, batch: int, seq: int, seed: int = 0):
+    """Synthetic token stream (+ stub modality embeddings)."""
+    docs = synthetic.token_dataset(max(64, 4 * batch), seq, cfg.vocab_size,
+                                   seed=seed)
+    rng = np.random.default_rng(seed)
+    key = jax.random.key(seed)
+    while True:
+        idx = rng.integers(0, docs.shape[0], size=batch)
+        out = {"tokens": jnp.asarray(docs[idx])}
+        if cfg.family == "vlm":
+            out["tokens"] = out["tokens"][:, :seq - cfg.num_image_tokens]
+            key, k = jax.random.split(key)
+            out["img_embeds"] = jax.random.normal(
+                k, (batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            key, k = jax.random.split(key)
+            out["frame_embeds"] = jax.random.normal(
+                k, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        yield out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (not reduced) config")
+    ap.add_argument("--optimizer", choices=("ssca", "fedsgd"),
+                    default="ssca")
+    ap.add_argument("--tau", type=float, default=2.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"optimizer={args.optimizer}")
+
+    start = 0
+    if args.ckpt_dir and Path(args.ckpt_dir).exists():
+        try:
+            latest = ckpt_io.latest(args.ckpt_dir)
+            restored, meta = ckpt_io.restore(latest)
+            params = jax.tree.map(lambda a, b: jnp.asarray(b, a.dtype),
+                                  params, restored["params"])
+            start = meta["step"]
+            print(f"restored {latest} (step {start})")
+        except FileNotFoundError:
+            pass
+
+    if args.optimizer == "ssca":
+        hp = ssca.SSCAHyperParams(tau=args.tau, rho=PowerLaw(0.9, 0.3),
+                                  gamma=PowerLaw(0.9, 0.35))
+        step_fn = jax.jit(steps.make_train_step(model, hp))
+        state = ssca.init(params, with_beta=False)
+    else:
+        step_fn = jax.jit(steps.make_sgd_train_step(model,
+                                                    PowerLaw(0.1, 0.5)))
+        state = jnp.asarray(1, jnp.int32)
+
+    stream = batch_stream(cfg, args.batch, args.seq)
+    t0 = time.time()
+    for t in range(start + 1, start + args.steps + 1):
+        batch = next(stream)
+        if args.optimizer == "ssca":
+            params, state, metrics = step_fn(params, state, batch)
+        else:
+            params, state, metrics = step_fn(params, state, batch)
+        if t % args.log_every == 0 or t == start + 1:
+            loss = float(metrics["loss"])
+            extra = ""
+            if "kkt_residual" in metrics:
+                extra = f" kkt={float(metrics['kkt_residual']):.3f}"
+            print(f"step {t}: loss={loss:.4f}{extra} "
+                  f"({(time.time()-t0)/max(t-start,1):.2f}s/step)")
+            if not np.isfinite(loss):
+                raise RuntimeError("loss diverged")
+        if args.ckpt_dir and args.ckpt_every and t % args.ckpt_every == 0:
+            ckpt_io.save(Path(args.ckpt_dir) / f"step_{t}",
+                         {"params": params}, step=t)
+            print(f"saved checkpoint step_{t}")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Section-V application: 3-layer swish network, closed-form SSCA updates."""
+from repro.mlpapp import closed_form, model  # noqa: F401

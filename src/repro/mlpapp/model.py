@@ -1,0 +1,85 @@
+"""The paper's Section-V application model.
+
+A three-layer network for L-class classification (eq. (10)):
+
+    input  K cells →  hidden J cells, swish S(z) = z·sigmoid(z) [13]
+                   →  output L cells, softmax
+
+with cross-entropy cost (9) and parameters
+ω = (ω1 ∈ R^{J×K}, ω2 ∈ R^{L×J}).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MLPParams(NamedTuple):
+    w1: jnp.ndarray  # (J, K)
+    w2: jnp.ndarray  # (L, J)
+
+
+def init_params(key, k: int, j: int, l: int, scale: float = 0.05) -> MLPParams:
+    k1, k2 = jax.random.split(key)
+    return MLPParams(
+        w1=scale * jax.random.normal(k1, (j, k), jnp.float32),
+        w2=scale * jax.random.normal(k2, (l, j), jnp.float32))
+
+
+def swish(z):
+    """S(z) = z / (1 + exp(−z))."""
+    return z * jax.nn.sigmoid(z)
+
+
+def swish_prime(z):
+    """S'(z) = σ(z)(1 + z(1 − σ(z))) — used by the explicit recursions."""
+    s = jax.nn.sigmoid(z)
+    return s * (1.0 + z * (1.0 - s))
+
+
+def hidden(params: MLPParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Pre-activation of the hidden layer: x @ ω1ᵀ, shape (..., J)."""
+    return x @ params.w1.T
+
+
+def logits(params: MLPParams, x: jnp.ndarray) -> jnp.ndarray:
+    return swish(hidden(params, x)) @ params.w2.T
+
+
+def predict(params: MLPParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Q_l(ω, x) of eq. (10): softmax class probabilities."""
+    return jax.nn.softmax(logits(params, x), axis=-1)
+
+
+def cross_entropy(params: MLPParams, batch) -> jnp.ndarray:
+    """F(ω) of eq. (9) over a batch: −mean_n Σ_l y_{n,l} log Q_l."""
+    x, y = batch
+    logp = jax.nn.log_softmax(logits(params, x), axis=-1)
+    return -jnp.mean(jnp.sum(y * logp, axis=-1))
+
+
+def cross_entropy_sum(params: MLPParams, batch) -> jnp.ndarray:
+    """Σ_n Σ_l −y log Q — un-normalized, for explicit client weights."""
+    x, y = batch
+    logp = jax.nn.log_softmax(logits(params, x), axis=-1)
+    return -jnp.sum(y * logp)
+
+
+def l2_objective(lam: float):
+    """F0(ω) = F(ω) + λ‖ω‖² of eq. (11)."""
+    def loss(params: MLPParams, batch):
+        reg = sum(jnp.vdot(w, w) for w in jax.tree.leaves(params)).real
+        return cross_entropy(params, batch) + lam * reg
+    return loss
+
+
+def accuracy(params: MLPParams, x: jnp.ndarray, y_onehot: jnp.ndarray):
+    pred = jnp.argmax(logits(params, x), axis=-1)
+    return jnp.mean((pred == jnp.argmax(y_onehot, axis=-1)).astype(jnp.float32))
+
+
+def sparsity(params: MLPParams) -> jnp.ndarray:
+    """‖ω‖² — the paper's Fig.-3 'model sparsity' proxy."""
+    return sum(jnp.vdot(w, w) for w in jax.tree.leaves(params)).real

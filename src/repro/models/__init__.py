@@ -1,0 +1,2 @@
+"""Architecture zoo: unified Model API over six families."""
+from repro.models.transformer import Model, build_model  # noqa: F401

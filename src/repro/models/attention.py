@@ -1,0 +1,199 @@
+"""Attention: GQA with RoPE, causal / sliding-window masks, chunked
+(flash-style, memory-bounded) computation, and KV-cache decode.
+
+Three execution paths:
+
+* ``attend``          — full materialized scores; used for short sequences.
+* ``attend_chunked``  — ``lax.scan`` over query blocks with only the
+                        visible key band sliced in (the pure-JAX flash
+                        pattern); each chunk is additionally rematerialized
+                        so the backward pass holds one chunk's scores at a
+                        time.
+* ``decode_attend``   — single-query attention against a (possibly ring-
+                        buffered) KV cache.
+
+GQA is computed *grouped* — q reshaped to (B, S, Hkv, G, Dh) and contracted
+against the un-expanded (B, S, Hkv, Dh) k/v — so the KV tensors are never
+materially repeated (a G× activation-memory saving for kv=1 archs).
+
+Shapes: q (B, S, H, Dh); k/v (B, S, Hkv, Dh) with H a multiple of Hkv.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -3e4  # representable in bf16 too
+
+# Context-parallel prefill: when set to a mesh axis name (e.g. "model"),
+# attend_chunked pins k/v to be sequence-sharded over that axis — each
+# rank computes scores against its S/axis keys (softmax reduces with
+# small psums), dividing the dominant score-matrix HBM traffic by the
+# axis size and avoiding head-count divisibility issues entirely
+# (whisper's 20 heads).  Set by the launch layer per variant.
+KV_SEQ_AXIS = None
+
+# Score-pipeline dtype.  f32 is the faithful default; the §Perf iteration
+# "bf16 score pipeline" sets bfloat16 to halve the softmax chain's HBM
+# traffic — the CPU-measurable proxy for the flash_attention Pallas kernel,
+# which keeps the whole chain in VMEM on TPU (see repro.kernels).
+SCORE_DTYPE = jnp.float32
+
+
+def _scores_grouped(q, k, scale):
+    """q: (B, Sq, H, Dh), k: (B, Sk, Hkv, Dh) -> (B, Hkv, G, Sq, Sk)."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    s_ = jnp.einsum('bqhgd,bkhd->bhgqk', qg, k,
+                    preferred_element_type=jnp.float32) * scale
+    return s_.astype(SCORE_DTYPE)
+
+
+def _combine_grouped(probs, v, out_dtype):
+    """probs: (B, Hkv, G, Sq, Sk), v: (B, Sk, Hkv, Dh) -> (B, Sq, H, Dh)."""
+    b, hkv, g, sq, sk = probs.shape
+    o = jnp.einsum('bhgqk,bkhd->bqhgd', probs.astype(out_dtype), v)
+    return o.reshape(b, sq, hkv * g, v.shape[-1])
+
+
+def attend(q, k, v, *, causal: bool = True, window: int = 0,
+           q_offset: int = 0, scale: Optional[float] = None):
+    """Full-score attention. ``window > 0`` adds a sliding-window band.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (for caches).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else dh ** -0.5
+    scores = _scores_grouped(q, k, scale)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _combine_grouped(probs, v, q.dtype)
+
+
+def attend_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                   chunk: int = 1024, scale: Optional[float] = None):
+    """Flash-style attention, scanned over query chunks.
+
+    Peak memory is O(S·chunk) instead of O(S²); with a sliding window only
+    the visible key band (width ``window + chunk``) is dynamically sliced.
+    Each chunk is wrapped in ``jax.checkpoint`` so a backward pass holds a
+    single chunk's score matrix.
+    """
+    b, s, h, dh = q.shape
+    scale = scale if scale is not None else dh ** -0.5
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    if KV_SEQ_AXIS is not None and not window:
+        from jax.sharding import PartitionSpec as P
+        k = jax.lax.with_sharding_constraint(
+            k, P(None, KV_SEQ_AXIS, None, None))
+        v = jax.lax.with_sharding_constraint(
+            v, P(None, KV_SEQ_AXIS, None, None))
+    n_chunks = s // chunk
+    qs = q.reshape(b, n_chunks, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    kpos_all = jnp.arange(s)
+    band = (window + chunk) if window else s
+    band = min(s, ((band + chunk - 1) // chunk) * chunk)
+
+    def one_chunk(ci, qc, k, v):
+        q0 = ci * chunk
+        if window:
+            start = jnp.clip(q0 + chunk - band, 0, s - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpos = jax.lax.dynamic_slice_in_dim(kpos_all, start, band)
+        else:
+            kc, vc, kpos = k, v, kpos_all
+        scores = _scores_grouped(qc, kc, scale)
+        qpos = q0 + jnp.arange(chunk)
+        mask = jnp.ones((chunk, kpos.shape[0]), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        # write probs in activation dtype: the f32 score matrix is the
+        # dominant HBM tensor at long S; softmax stats stay f32 inside
+        # the fusion, only the (q_chunk, S) probs block round-trips bf16.
+        probs = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
+        return _combine_grouped(probs, vc, qc.dtype)
+
+    ckpt_chunk = jax.checkpoint(
+        one_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(_, xs):
+        ci, qc = xs
+        return None, ckpt_chunk(ci, qc, k, v)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(n_chunks), qs))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+class KVCache(NamedTuple):
+    """Ring-buffered KV cache.  ``length`` counts tokens ever written; the
+    buffer holds the last ``k.shape[1]`` of them (= full seq for dense
+    decode, = window for sliding-window decode)."""
+    k: jnp.ndarray        # (B, C, Hkv, Dh)
+    v: jnp.ndarray        # (B, C, Hkv, Dh)
+    length: jnp.ndarray   # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_cache(batch: int, capacity: int, num_kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, capacity, num_kv_heads, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def cache_update(cache: KVCache, k_new, v_new) -> KVCache:
+    """Write one step (B, 1, Hkv, Dh) at position length % capacity."""
+    slot = cache.length % cache.capacity
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                            slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                            slot, axis=1)
+    return KVCache(k, v, cache.length + 1)
+
+
+def decode_attend(q, cache: KVCache, *, window: int = 0,
+                  scale: Optional[float] = None):
+    """Single-token attention: q (B, 1, H, Dh) vs the cache contents.
+
+    Handles both full caches (capacity == total seq) and ring buffers
+    (capacity == window): positions are reconstructed modulo capacity and
+    invalid slots masked.
+    """
+    b, one, h, dh = q.shape
+    scale = scale if scale is not None else dh ** -0.5
+    cap = cache.capacity
+    scores = _scores_grouped(q, cache.k, scale)   # (B, Hkv, G, 1, C)
+    # slot i holds absolute position p ≡ i (mod cap) with the largest
+    # p < length; valid iff p >= length - cap (ring) and, for sliding
+    # windows, p > length - 1 - window.
+    length = cache.length  # AFTER the current token was written
+    slots = jnp.arange(cap)
+    newest = length - 1
+    pos = newest - ((newest - slots) % cap)   # absolute position per slot
+    valid = (pos >= 0) & (pos >= length - cap)
+    if window:
+        valid &= pos > newest - window
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _combine_grouped(probs, cache.v, q.dtype)

@@ -1,0 +1,99 @@
+"""Shared building blocks for the architecture zoo.
+
+Everything is a pure function over explicit parameter dicts (no flax/haiku —
+the framework owns its parameter pytrees so SSCA state, sharding rules and
+checkpointing can treat every architecture uniformly).
+
+Convention: parameters for the repeated decoder stack are *layer-stacked*:
+every leaf has a leading ``(num_layers, ...)`` axis and the stack is applied
+with ``jax.lax.scan`` (+ optional remat) so the HLO stays O(1) in depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    """RMSNorm in f32, cast back to input dtype (llama convention)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward (llama family): silu(x·Wg) ⊙ (x·Wu) · Wd."""
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    """Classic GELU MLP (whisper / GPT-2 family)."""
+    return jax.nn.gelu(x @ w_in + b_in, approximate=True) @ w_out + b_out
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table):
+    """Tied unembedding: logits = x · Eᵀ (f32 accumulation)."""
+    return jnp.einsum('...d,vd->...v', x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Token-level CE in f32; labels: int ids. Returns mean over tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    return jnp.mean(loss)

@@ -1,0 +1,76 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = σ(x_t · W_a + b_a)                       (recurrence gate)
+    i_t = σ(x_t · W_x + b_x)                       (input gate)
+    a_t = exp(−c · softplus(Λ) ⊙ r_t)              (c = 8)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+A linear diagonal recurrence ⇒ parallelizable with
+``jax.lax.associative_scan`` over the composition
+(a₁,b₁)∘(a₂,b₂) = (a₁a₂, a₂b₁ + b₂) — the TPU-native formulation of the
+paper's GPU linear-scan kernel.  Decode keeps ``h`` as explicit state.
+
+The full recurrent block (Griffin) wraps the RG-LRU with a temporal conv
+(width 4) and an output gate; the block lives in ``transformer.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RGLRU_C = 8.0
+
+
+def stable_decay(lam_param, r):
+    """a_t = exp(−c·softplus(Λ)·r_t), computed in f32 via log-space."""
+    log_a = -RGLRU_C * jax.nn.softplus(lam_param.astype(jnp.float32)) \
+        * r.astype(jnp.float32)
+    return jnp.exp(log_a)
+
+
+def rg_lru(x, r, i, lam_param, h0=None):
+    """Run the recurrence over the sequence with an associative scan.
+
+    x, r, i: (B, S, D); lam_param: (D,); h0: (B, D) or None.
+    Returns (y (B,S,D), h_last (B,D)).
+    """
+    a = stable_decay(lam_param, r)                    # (B, S, D) f32
+    gated = (i.astype(jnp.float32) * x.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    if h0 is not None:
+        # fold the carry into the first element
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(x, r, i, lam_param, h):
+    """One decode step. x, r, i: (B, D); h: (B, D) f32 state."""
+    a = stable_decay(lam_param, r)                    # (B, D)
+    gated = i.astype(jnp.float32) * x.astype(jnp.float32)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    return h_new.astype(x.dtype), h_new
+
+
+def temporal_conv(x, w, state=None):
+    """Causal depthwise temporal conv, width T (Griffin uses 4).
+
+    x: (B, S, D); w: (T, D).  ``state``: (B, T−1, D) trailing context for
+    decode.  Returns (y, new_state).
+    """
+    t = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], t - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+T−1, D)
+    y = sum(xp[:, j:j + x.shape[1]] * w[j] for j in range(t))
+    return y, xp[:, -(t - 1):]

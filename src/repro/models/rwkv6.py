@@ -1,0 +1,176 @@
+"""RWKV-6 "Finch" time-mix with data-dependent decay (arXiv:2404.05892).
+
+Per head h with key/value dims Dk = Dv = head size, the WKV state
+S ∈ R^{Dk×Dv} evolves per token:
+
+    S_t = diag(w_t) · S_{t−1} + k_tᵀ v_t
+    o_t = r_t · (S_{t−1} + diag(u) · k_tᵀ v_t)
+
+where w_t = exp(−exp(decay_t)) is the *data-dependent* decay (the Finch
+novelty vs RWKV-5's static decay) and u is the per-head "bonus" for the
+current token.
+
+Training/prefill runs a chunked ``lax.scan``: within a chunk of length T_c
+the contribution of in-chunk tokens is computed with masked matmuls (MXU
+friendly) and the carried state is applied with cumulative decays — the
+TPU adaptation of the paper's CUDA wkv kernel (sequential over chunks,
+parallel inside).
+
+Simplifications vs the reference implementation (documented deviations):
+token-shift data-dependence uses a single learned mix (not the 5-way LoRA
+of the release), and decay LoRA is a two-layer projection.  These keep the
+state-evolution math — what the roofline and the SSCA technique care
+about — exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray      # (B, H, Dk, Dv) f32
+    shift: jnp.ndarray    # (B, D) last token's x (token-shift context)
+
+
+def time_mix_params_shapes(d_model: int, num_heads: int, lora: int = 64):
+    head = d_model // num_heads
+    return dict(
+        mix_r=(d_model,), mix_k=(d_model,), mix_v=(d_model,),
+        mix_w=(d_model,), mix_g=(d_model,),
+        wr=(d_model, d_model), wk=(d_model, d_model), wv=(d_model, d_model),
+        wg=(d_model, d_model), wo=(d_model, d_model),
+        decay_w1=(d_model, lora), decay_w2=(lora, d_model),
+        decay_base=(d_model,), bonus=(num_heads, head),
+        ln_w=(num_heads, head), ln_b=(num_heads, head))
+
+
+def _token_shift(x, mix, shift_state):
+    """x ← lerp(x, x_{t−1}, mix): (B,S,D) with carry for t=0."""
+    prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    return x + mix * (prev - x)
+
+
+def _group_norm(x, w, b, eps=64e-5):
+    """Per-head LayerNorm of the attention readout. x: (B,S,H,Dv)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+LOG_DECAY_FLOOR = -5.0   # per-token decay clamped to [e^-5, 1] so the
+                         # factorized in-chunk exponentials stay inside f32
+                         # range for chunk ≤ 16 (16·5 = 80 < log(f32max)≈88).
+
+
+def wkv_chunked(r, k, v, w, u, s0, chunk: int = 16):
+    """Chunked WKV scan.
+
+    r,k,v,w: (B, S, H, Dh) with w the per-token decay in (0,1); u: (H, Dh);
+    s0: (B, H, Dh, Dh) f32 carry.  Returns (o (B,S,H,Dh), s_last).
+    """
+    b, s, h, dh = r.shape
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+    f32 = jnp.float32
+
+    def reshape(x):
+        return x.astype(f32).reshape(b, nc, chunk, h, dh).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = map(reshape, (r, k, v, w))     # (nc, B, H, T, Dh)
+    logw = jnp.clip(jnp.log(jnp.maximum(wc, 1e-20)), LOG_DECAY_FLOOR, 0.0)
+
+    def one_chunk(carry, xs):
+        s_prev = carry                               # (B, H, Dk, Dv)
+        rt, kt, vt, lw = xs                          # (B, H, T, Dh)
+        cum = jnp.cumsum(lw, axis=2)                 # inclusive cumulative log-decay
+        cum_excl = cum - lw                          # exclusive
+        total = cum[:, :, -1:, :]                    # (B,H,1,Dh)
+        # carry contribution: o_carry[t] = (r_t ⊙ decay_to_t) @ S_prev
+        r_dec = rt * jnp.exp(cum_excl)
+        o_carry = jnp.einsum('bhtk,bhkv->bhtv', r_dec, s_prev)
+        # in-chunk: token j contributes to t > j with decay Π_{m=j+1..t−1}?
+        # RWKV semantics: S_{t-1} includes tokens ≤ t−1 with decay applied
+        # (t−1−j) times exclusive; plus the diag(u) bonus for token t itself.
+        # decay factor from j to t (j < t): exp(cum_excl[t] − cum[j] + lw[j])
+        # NOTE: in RWKV-6 w_t multiplies the state *before* adding k_t v_t:
+        #   S_t = diag(w_t) S_{t−1} + k_t^T v_t
+        # so token j sits in S_{t−1} with weight Π_{m=j+1}^{t−1} w_m
+        #   = exp(cum_excl[t] − cum[j]).
+        att = jnp.einsum('bhtk,bhjk->bhtj', rt * jnp.exp(cum_excl),
+                         kt * jnp.exp(-cum))
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        # current-token bonus: r_t ⊙ u · (k_t^T v_t)
+        bonus = jnp.einsum('bhtk,hk,bhtk->bht', rt, u.astype(f32), kt)
+        o_in = jnp.einsum('bhtj,bhjv->bhtv', att, vt) \
+            + bonus[..., None] * vt
+        # state update: S_next = diag(Πw) S_prev + Σ_j decay_{j→end} k_j v_j
+        # (decay acts on the Dk axis: S_t = diag(w_t) S_{t−1} + k_tᵀ v_t)
+        k_dec = kt * jnp.exp(total - cum)
+        s_next = s_prev * jnp.exp(total[:, :, 0, :])[:, :, :, None] \
+            + jnp.einsum('bhjk,bhjv->bhkv', k_dec, vt)
+        return s_next, o_carry + o_in
+
+    s_last, out = jax.lax.scan(one_chunk, s0.astype(f32), (rc, kc, vc, logw))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dh)
+    return out, s_last
+
+
+def wkv_step(r, k, v, w, u, s):
+    """One decode step. r,k,v,w: (B,H,Dh); s: (B,H,Dk,Dv) f32."""
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    kv = jnp.einsum('bhk,bhv->bhkv', k, v)
+    o = jnp.einsum('bhk,bhkv->bhv', r, s + u.astype(f32)[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    return o, s_new
+
+
+def time_mix(params, x, state: RWKVState, num_heads: int, *,
+             decode: bool = False, chunk: int = 64):
+    """Full RWKV-6 attention replacement. x: (B,S,D) (S=1 when decode)."""
+    b, s, d = x.shape
+    h = num_heads
+    dh = d // h
+
+    xr = _token_shift(x, params["mix_r"], state.shift)
+    xk = _token_shift(x, params["mix_k"], state.shift)
+    xv = _token_shift(x, params["mix_v"], state.shift)
+    xw = _token_shift(x, params["mix_w"], state.shift)
+    xg = _token_shift(x, params["mix_g"], state.shift)
+
+    r = (xr @ params["wr"]).reshape(b, s, h, dh)
+    k = (xk @ params["wk"]).reshape(b, s, h, dh)
+    v = (xv @ params["wv"]).reshape(b, s, h, dh)
+    g = jax.nn.silu(xg @ params["wg"])
+    # data-dependent decay (Finch): w = exp(−exp(base + LoRA(x)))
+    dec = params["decay_base"] + jnp.tanh(
+        xw.astype(jnp.float32) @ params["decay_w1"].astype(jnp.float32)) \
+        @ params["decay_w2"].astype(jnp.float32)
+    w = jnp.exp(jnp.clip(-jnp.exp(dec.astype(jnp.float32)),
+                         LOG_DECAY_FLOOR, 0.0)).reshape(b, s, h, dh)
+
+    if decode:
+        o, s_new = wkv_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0],
+                            params["bonus"], state.wkv)
+        o = o[:, None]                                 # (B,1,H,Dh)
+    else:
+        o, s_new = wkv_chunked(r, k, v, w, params["bonus"], state.wkv,
+                               chunk=min(chunk, s))
+    o = _group_norm(o.reshape(b, s, h, dh), params["ln_w"], params["ln_b"])
+    y = (o.reshape(b, s, d) * g) @ params["wo"]
+    new_state = RWKVState(wkv=s_new, shift=x[:, -1])
+    return y.astype(x.dtype), new_state
+
+
+def channel_mix(params, x, shift_state):
+    """RWKV channel-mix (the FFN analogue): squared-relu gating."""
+    xk = _token_shift(x, params["cmix_k"], shift_state)
+    xr = _token_shift(x, params["cmix_r"], shift_state)
+    k = jnp.square(jax.nn.relu(xk @ params["ck"]))
+    return jax.nn.sigmoid(xr @ params["cr"]) * (k @ params["cv"]), x[:, -1]

@@ -1,0 +1,7 @@
+"""Local/client optimizers for the SGD-based baselines and ablations.
+
+Pure-functional (init, update) pairs over pytrees, optax-style but
+self-contained (the framework owns its optimizer state for the same
+reason it owns SSCA state: uniform sharding/checkpointing).
+"""
+from repro.optim.optimizers import adam, momentum, sgd  # noqa: F401

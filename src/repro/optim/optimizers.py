@@ -1,0 +1,85 @@
+"""SGD / momentum / Adam as (init, update) pairs.
+
+``update(grads, state, params) -> (new_params, new_state)``; the learning
+rate is a callable of the (1-based, float) step so the baselines can use
+the paper's decaying ``r = ā/t^ᾱ`` schedules directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+
+
+class MomentumState(NamedTuple):
+    step: jnp.ndarray
+    velocity: PyTree
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def sgd(lr: Schedule):
+    def init(params):
+        return SGDState(step=jnp.asarray(1, jnp.int32))
+
+    def update(grads, state, params):
+        r = lr(state.step.astype(jnp.float32))
+        new = jax.tree.map(lambda w, g: w - r * g, params, grads)
+        return new, SGDState(step=state.step + 1)
+
+    return init, update
+
+
+def momentum(lr: Schedule, beta: float = 0.9, nesterov: bool = False):
+    def init(params):
+        return MomentumState(step=jnp.asarray(1, jnp.int32),
+                             velocity=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        r = lr(state.step.astype(jnp.float32))
+        vel = jax.tree.map(lambda v, g: beta * v + g,
+                           state.velocity, grads)
+        if nesterov:
+            step_dir = jax.tree.map(lambda v, g: beta * v + g, vel, grads)
+        else:
+            step_dir = vel
+        new = jax.tree.map(lambda w, d: w - r * d, params, step_dir)
+        return new, MomentumState(step=state.step + 1, velocity=vel)
+
+    return init, update
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8):
+    def init(params):
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return AdamState(step=jnp.asarray(1, jnp.int32), mu=zeros,
+                         nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        t = state.step.astype(jnp.float32)
+        r = lr(t)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * g * g,
+                          state.nu, grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** t), mu)
+        nu_hat = jax.tree.map(lambda n: n / (1 - b2 ** t), nu)
+        new = jax.tree.map(
+            lambda w, m, n: w - r * m / (jnp.sqrt(n) + eps),
+            params, mu_hat, nu_hat)
+        return new, AdamState(step=state.step + 1, mu=mu, nu=nu)
+
+    return init, update

@@ -1,0 +1,34 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override is
+# dryrun-only, per the assignment).  Keep x64 off (model code is 32-bit).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)
+
+
+def small_data(n_train=2000, n_test=500, seed=0):
+    from repro.data import synthetic
+    return synthetic.classification_dataset(
+        n_train=n_train, n_test=n_test, seed=seed)
+
+
+@pytest.fixture(scope="session")
+def dataset():
+    return small_data()
+
+
+@pytest.fixture(scope="session")
+def fed_partition(dataset):
+    from repro.data import partition
+    return partition.iid(len(dataset.x_train), 10, seed=0)

@@ -1,0 +1,150 @@
+"""The Section-V application: explicit closed forms vs autodiff, and the
+full federated runs reproducing the paper's qualitative claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ssca
+from repro.core.schedules import paper_schedules
+from repro.fed import runtime
+from repro.mlpapp import closed_form, model as mlp
+
+
+@pytest.fixture(scope="module")
+def setup(dataset):
+    params = mlp.init_params(jax.random.key(1), 784, 16, 10)
+    x = jnp.asarray(dataset.x_train[:64])
+    y = jnp.asarray(dataset.y_train[:64])
+    wn = jnp.full((64,), 1.0 / 64.0)
+    return params, x, y, wn
+
+
+class TestClosedFormsMatchAutodiff:
+    """The paper's explicit B̄/C̄/Ā derivations == autodiff gradients.
+
+    This cross-validates both the paper's algebra and the generic core.
+    """
+
+    def test_bbar_cbar_equal_gradients(self, setup):
+        params, x, y, wn = setup
+        bbar, cbar = closed_form.bbar_cbar(params, x, y, wn)
+
+        def weighted_ce(p):
+            logp = jax.nn.log_softmax(mlp.logits(p, x), axis=-1)
+            return -jnp.sum(wn * jnp.sum(y * logp, axis=-1))
+
+        g = jax.grad(weighted_ce)(params)
+        np.testing.assert_allclose(np.asarray(bbar), np.asarray(g.w1),
+                                   rtol=2e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(cbar), np.asarray(g.w2),
+                                   rtol=2e-4, atol=1e-6)
+
+    def test_abar_equals_cost_plus_reg(self, setup):
+        params, x, y, wn = setup
+        a = closed_form.abar(params, x, y, wn, tau=0.1)
+        ce = float(mlp.cross_entropy(params, (x, y)))  # mean == sum·(1/64)
+        sq = float(mlp.sparsity(params))
+        assert float(a) == pytest.approx(ce + 0.1 * sq, rel=1e-4)
+
+    def test_alg1_explicit_equals_generic(self, setup):
+        """One full Algorithm-1 round: eqs. (13)–(17) == generic pytree
+        core with surrogate (6)."""
+        params, x, y, wn = setup
+        tau, lam = 0.1, 1e-3
+        rho_s, gamma_s = paper_schedules(100)
+        rho, gamma = float(rho_s(1)), float(gamma_s(1))
+
+        p_explicit, _ = closed_form.alg1_update(
+            closed_form.init_alg1_state(params), params, x, y, wn,
+            rho=rho, gamma=gamma, tau=tau, lam=lam)
+
+        hp = ssca.SSCAHyperParams(tau=tau, lam=lam, rho=rho_s, gamma=gamma_s)
+
+        def loss(p, batch):
+            xb, yb, w = batch
+            logp = jax.nn.log_softmax(mlp.logits(p, xb), axis=-1)
+            return -jnp.sum(w * jnp.sum(yb * logp, axis=-1))
+
+        rd = ssca.round_fn(loss, hp)
+        p_generic, _ = rd(params, ssca.init(params), (x, y, wn))
+        np.testing.assert_allclose(np.asarray(p_explicit.w1),
+                                   np.asarray(p_generic.w1), rtol=1e-4,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(p_explicit.w2),
+                                   np.asarray(p_generic.w2), rtol=1e-4,
+                                   atol=1e-6)
+
+    def test_alg2_explicit_runs_and_respects_nu_box(self, setup):
+        params, x, y, wn = setup
+        st = closed_form.init_alg2_state(params)
+        p = params
+        c = 1e5
+        for t in range(1, 4):
+            rho_s, gamma_s = paper_schedules(100)
+            p, st = closed_form.alg2_update(
+                st, p, x, y, wn, rho=float(rho_s(t)),
+                gamma=float(gamma_s(t)), tau=0.1, c=c, limit_u=0.13)
+        assert np.isfinite(np.asarray(p.w1)).all()
+
+    def test_swish_prime_matches_autodiff(self):
+        z = jnp.linspace(-4, 4, 101)
+        d_auto = jax.vmap(jax.grad(lambda t: mlp.swish(t)))(z)
+        np.testing.assert_allclose(np.asarray(mlp.swish_prime(z)),
+                                   np.asarray(d_auto), rtol=1e-5, atol=1e-6)
+
+
+class TestFederatedRuns:
+    """Integration: the paper's §VI claims on the synthetic dataset."""
+
+    def test_alg1_learns(self, dataset, fed_partition):
+        _, h = runtime.run_alg1(dataset, fed_partition, batch_size=100,
+                                rounds=40, eval_every=40, eval_samples=1000)
+        assert h.train_cost[-1] < 0.6
+        assert h.test_accuracy[-1] > 0.8
+
+    def test_alg1_beats_fedsgd_per_round(self, dataset, fed_partition):
+        """Claim (i): Alg 1 converges faster than the E=1 SGD baseline at
+        the same per-round communication."""
+        _, h_ssca = runtime.run_alg1(dataset, fed_partition, batch_size=100,
+                                     rounds=30, eval_every=30,
+                                     eval_samples=1000)
+        _, h_sgd = runtime.run_fedsgd(dataset, fed_partition, batch_size=100,
+                                      rounds=30, eval_every=30,
+                                      eval_samples=1000, lr_a=2.0,
+                                      lr_alpha=0.3)
+        assert h_ssca.train_cost[-1] < h_sgd.train_cost[-1]
+        assert h_ssca.uplink_floats_per_round == h_sgd.uplink_floats_per_round
+
+    def test_larger_batch_converges_faster(self, dataset, fed_partition):
+        """Claim (ii)."""
+        _, h10 = runtime.run_alg1(dataset, fed_partition, batch_size=10,
+                                  rounds=30, eval_every=30,
+                                  eval_samples=1000)
+        _, h100 = runtime.run_alg1(dataset, fed_partition, batch_size=100,
+                                   rounds=30, eval_every=30,
+                                   eval_samples=1000)
+        assert h100.train_cost[-1] < h10.train_cost[-1]
+
+    def test_alg2_respects_cost_limit(self, dataset, fed_partition):
+        """Claim (iii): the constrained run converges to cost ≈ U."""
+        u = 0.4
+        _, h = runtime.run_alg2(dataset, fed_partition, batch_size=100,
+                                rounds=60, limit_u=u, eval_every=20,
+                                eval_samples=1000)
+        assert h.train_cost[-1] == pytest.approx(u, abs=0.12)
+        assert h.slack[-1] < 1e-2
+
+    def test_fedavg_runs(self, dataset, fed_partition):
+        _, h = runtime.run_fedavg(dataset, fed_partition, batch_size=50,
+                                  rounds=10, local_steps=2, eval_every=10,
+                                  eval_samples=500, lr_a=2.0)
+        assert np.isfinite(h.train_cost[-1])
+
+    def test_noniid_partition_alg1_still_converges(self, dataset):
+        from repro.data import partition
+        labels = dataset.y_train.argmax(1)
+        part = partition.dirichlet(labels, 10, alpha=0.3, seed=0)
+        _, h = runtime.run_alg1(dataset, part, batch_size=50, rounds=40,
+                                eval_every=40, eval_samples=1000)
+        assert h.train_cost[-1] < 0.8

@@ -1,0 +1,171 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import constrained, ssca
+from repro.core.schedules import PowerLaw
+from repro.data import partition
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+class TestSurrogateInvariants:
+    @given(rho=st.floats(0.01, 1.0), tau=st.floats(0.01, 2.0),
+           seed=st.integers(0, 2**16))
+    @settings(**SETTINGS)
+    def test_gradient_consistency_at_fixed_point(self, rho, tau, seed):
+        """Assumption 2(1): at a stationary batch (same grad every round)
+        the surrogate's minimizer drives ω toward −g/(2τ)-corrected fixed
+        point; equivalently, if g = 0 and lin = −2τω, ω̄ = ω (fixed point
+        of (16) at stationarity)."""
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(5,)), jnp.float32)
+        st_ = ssca.SSCAState(step=jnp.asarray(1),
+                             lin=-2.0 * tau * w, beta=None)
+        hp = ssca.SSCAHyperParams(tau=tau, lam=0.0)
+        wbar = ssca.solve_surrogate(st_, hp)
+        np.testing.assert_allclose(np.asarray(wbar), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5)
+
+    @given(rho=st.floats(0.05, 0.95), seed=st.integers(0, 2**16))
+    @settings(**SETTINGS)
+    def test_ema_is_convex_combination(self, rho, seed):
+        """EMA output stays inside the [min, max] envelope of its inputs."""
+        rng = np.random.default_rng(seed)
+        old = jnp.asarray(rng.normal(size=(7,)), jnp.float32)
+        new = jnp.asarray(rng.normal(size=(7,)), jnp.float32)
+        out = np.asarray(ssca.ema(old, new, rho))
+        lo = np.minimum(np.asarray(old), np.asarray(new)) - 1e-6
+        hi = np.maximum(np.asarray(old), np.asarray(new)) + 1e-6
+        assert (out >= lo).all() and (out <= hi).all()
+
+    @given(tau=st.floats(0.1, 2.0), c=st.floats(1.0, 1e4),
+           a_t=st.floats(-2.0, 2.0), u=st.floats(-2.0, 2.0),
+           seed=st.integers(0, 2**16))
+    @settings(**SETTINGS)
+    def test_lemma1_kkt_conditions(self, tau, c, a_t, u, seed):
+        """Lemma-1 solutions satisfy the KKT system of problem (19):
+        ν ∈ [0, c]; stationarity 2ω̄(1+ντ) = −νB; and ν < c ⇒ s = 0
+        complementarity (the slack only activates at the penalty cap)."""
+        rng = np.random.default_rng(seed)
+        lin = {"w": jnp.asarray(rng.normal(size=(6,)), jnp.float32)}
+        wbar, s, nu = constrained.solve_lemma1(lin, a_t, u, tau, c)
+        nu_f = float(nu)
+        # relative tolerance: ν is clipped at f32(c), which can exceed the
+        # python float c by 1 ulp (hypothesis found c=512.47555669…)
+        assert 0.0 <= nu_f <= c * (1.0 + 1e-5)
+        lhs = 2.0 * np.asarray(wbar["w"]) * (1.0 + nu_f * tau)
+        rhs = -nu_f * np.asarray(lin["w"])
+        np.testing.assert_allclose(lhs, rhs, rtol=2e-3, atol=1e-3)
+        if nu_f < c * (1 - 1e-5):
+            # complementarity (f32: ν from a sqrt, slack quadratic in ν)
+            assert float(s) <= 5e-3 * max(1.0, abs(a_t - u))
+
+    @given(gamma=st.floats(0.0, 1.0), seed=st.integers(0, 2**16))
+    @settings(**SETTINGS)
+    def test_iterate_move_is_interpolation(self, gamma, seed):
+        """(4): ω^{t+1} lies on the segment [ω^t, ω̄^t]."""
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+        wbar = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+        out = (1 - gamma) * w + gamma * wbar
+        lo = np.minimum(np.asarray(w), np.asarray(wbar)) - 1e-6
+        hi = np.maximum(np.asarray(w), np.asarray(wbar)) + 1e-6
+        assert ((np.asarray(out) >= lo) & (np.asarray(out) <= hi)).all()
+
+
+class TestPartitionInvariants:
+    @given(n=st.integers(20, 5000), i=st.integers(1, 20),
+           seed=st.integers(0, 2**16))
+    @settings(**SETTINGS)
+    def test_iid_partition_disjoint_and_complete(self, n, i, seed):
+        part = partition.iid(n, i, seed=seed)
+        all_idx = np.concatenate(part.indices)
+        assert len(all_idx) == n
+        assert len(np.unique(all_idx)) == n       # disjoint + complete
+        assert part.total == n
+        assert part.sizes.sum() == n
+
+    @given(n=st.integers(100, 2000), i=st.integers(2, 10),
+           alpha=st.floats(0.1, 10.0), seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_dirichlet_partition_disjoint_and_complete(self, n, i, alpha,
+                                                       seed):
+        rng = np.random.default_rng(seed)
+        labels = rng.integers(0, 10, size=n)
+        part = partition.dirichlet(labels, i, alpha=alpha, seed=seed)
+        all_idx = np.concatenate(part.indices)
+        assert len(np.unique(all_idx)) == n
+
+    @given(n=st.integers(100, 1000), i=st.integers(2, 8),
+           b=st.integers(1, 32), seed=st.integers(0, 2**16))
+    @settings(**SETTINGS)
+    def test_weights_sum_to_inverse_batch(self, n, i, b, seed):
+        """Σ_i N_i/(B·N) · B = 1 — the aggregation weights of (2) are a
+        proper average over the round's samples."""
+        part = partition.iid(n, i, seed=seed)
+        w = part.weights(b)
+        assert float((w * b).sum()) == 1.0 or \
+            abs(float((w * b).sum()) - 1.0) < 1e-6
+
+    @given(seed=st.integers(0, 2**16), t=st.integers(0, 100))
+    @settings(**SETTINGS)
+    def test_minibatch_sampling_within_client_shard(self, seed, t):
+        part = partition.iid(500, 5, seed=seed)
+        mb = partition.sample_minibatches(part, 8, t, seed=seed)
+        for ci in range(5):
+            assert np.isin(mb[ci], part.indices[ci]).all()
+
+
+class TestKernelProperties:
+    @given(rows=st.integers(1, 40), cols=st.integers(1, 300),
+           seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_ssca_kernel_any_shape(self, rows, cols, seed):
+        """The fused kernel handles arbitrary (non-aligned) leaf shapes via
+        padding, matching the oracle."""
+        from repro.kernels import ops, ref
+        rng = np.random.default_rng(seed)
+        shape = (rows, cols)
+        mk = lambda: jnp.asarray(rng.normal(size=shape), jnp.float32)
+        w, lin, g, beta = mk(), mk(), mk(), mk()
+        w2, l2, _ = ops.ssca_update({"p": w}, {"p": lin}, {"p": g},
+                                    {"p": beta}, rho=0.7, gamma=0.4,
+                                    tau=0.2, lam=0.0, interpret=True)
+        scal = jnp.asarray([0.7, 0.4, 0.2, 0.0], jnp.float32)
+        we, le, _ = ref.ssca_update_2d(w, lin, g, beta, scal)
+        np.testing.assert_allclose(np.asarray(w2["p"]), np.asarray(we),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestAttentionProperties:
+    @given(s=st.sampled_from([16, 32, 64]), window=st.sampled_from([0, 8]),
+           seed=st.integers(0, 2**16))
+    @settings(max_examples=15, deadline=None)
+    def test_chunked_equals_full(self, s, window, seed):
+        """attend_chunked == attend for every chunking of the same input."""
+        from repro.models import attention
+        ks = jax.random.split(jax.random.key(seed), 3)
+        q = jax.random.normal(ks[0], (1, s, 2, 16), jnp.float32)
+        k = jax.random.normal(ks[1], (1, s, 1, 16), jnp.float32)
+        v = jax.random.normal(ks[2], (1, s, 1, 16), jnp.float32)
+        full = attention.attend(q, k, v, causal=True, window=window)
+        chunked = attention.attend_chunked(q, k, v, causal=True,
+                                           window=window, chunk=8)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                                   rtol=2e-3, atol=2e-3)
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_probs_rowsum_one(self, seed):
+        """Softmax over valid keys only: output is a convex combination of
+        values ⇒ bounded by value envelope."""
+        from repro.models import attention
+        ks = jax.random.split(jax.random.key(seed), 3)
+        q = jax.random.normal(ks[0], (1, 8, 2, 8), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 8, 2, 8), jnp.float32)
+        v = jnp.ones((1, 8, 2, 8), jnp.float32)
+        o = attention.attend(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(o), 1.0, rtol=1e-4)

@@ -1,0 +1,90 @@
+"""Secure aggregation: masks cancel exactly; individual messages hidden."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import secure
+
+
+def _messages(n, key):
+    ks = jax.random.split(key, n)
+    return [{"w1": jax.random.normal(k, (6, 4)),
+             "w2": jax.random.normal(jax.random.fold_in(k, 1), (3,))}
+            for k in ks]
+
+
+def test_masks_cancel_in_sum():
+    n = 5
+    msgs = _messages(n, jax.random.key(0))
+    skey = jax.random.key(42)
+    masked = [secure.mask_message(m, skey, i, n, round_idx=7)
+              for i, m in enumerate(msgs)]
+    agg = secure.aggregate(masked)
+    expect = msgs[0]
+    for m in msgs[1:]:
+        expect = jax.tree.map(jnp.add, expect, m)
+    for a, e in zip(jax.tree.leaves(agg), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_individual_message_is_hidden():
+    """A single masked upload is statistically far from the raw message
+    (mask std ~1 dominates); and differs across rounds (fresh masks)."""
+    n = 4
+    msgs = _messages(n, jax.random.key(1))
+    skey = jax.random.key(42)
+    m0_r1 = secure.mask_message(msgs[0], skey, 0, n, round_idx=1)
+    m0_r2 = secure.mask_message(msgs[0], skey, 0, n, round_idx=2)
+    diff_raw = float(jnp.abs(m0_r1["w1"] - msgs[0]["w1"]).mean())
+    assert diff_raw > 0.5          # masked far from raw
+    diff_rounds = float(jnp.abs(m0_r1["w1"] - m0_r2["w1"]).mean())
+    assert diff_rounds > 0.5       # masks are per-round
+
+
+def test_ssca_round_unchanged_under_masking():
+    """Algorithm 1 with secure aggregation == without (the server only
+    ever consumes the sum)."""
+    from repro.core import ssca
+    n = 3
+    params = {"w": jnp.asarray([0.3, -0.2, 0.9])}
+    msgs = _messages_like_grad(params, n)
+    skey = jax.random.key(7)
+    hp = ssca.SSCAHyperParams(tau=0.5)
+    st = ssca.init(params, with_beta=False)
+
+    plain = msgs[0]
+    for m in msgs[1:]:
+        plain = jax.tree.map(jnp.add, plain, m)
+    p_plain, _ = ssca.server_update(st, params, plain, hp)
+
+    masked = [secure.mask_message(m, skey, i, n, 1)
+              for i, m in enumerate(msgs)]
+    agg = secure.aggregate(masked)
+    p_sec, _ = ssca.server_update(st, params, agg, hp)
+    np.testing.assert_allclose(np.asarray(p_plain["w"]),
+                               np.asarray(p_sec["w"]), rtol=1e-5, atol=1e-6)
+
+
+def _messages_like_grad(params, n):
+    return [jax.tree.map(
+        lambda w: w * (i + 1) * 0.1 + 0.01 * i, params)
+        for i in range(n)]
+
+
+def test_secure_run_matches_plain_run(dataset, fed_partition):
+    """End-to-end: run_alg1(secure=True) ≈ run_alg1(secure=False).
+
+    f32 mask cancellation leaves rounding residue ~1e-7 per entry per
+    round (production secure-agg uses modular integer arithmetic for
+    exactness); over 5 rounds the trajectories agree to ~1e-4 absolute
+    on O(0.2)-scale weights."""
+    from repro.fed import runtime
+    p1, h1 = runtime.run_alg1(dataset, fed_partition, batch_size=20,
+                              rounds=5, eval_every=5, eval_samples=500)
+    p2, h2 = runtime.run_alg1(dataset, fed_partition, batch_size=20,
+                              rounds=5, eval_every=5, eval_samples=500,
+                              secure=True)
+    np.testing.assert_allclose(np.asarray(p1.w1), np.asarray(p2.w1),
+                               atol=5e-4)
+    assert abs(h1.train_cost[-1] - h2.train_cost[-1]) < 1e-3

@@ -1,0 +1,177 @@
+"""Unit tests for the SSCA core: schedules, Algorithm 1, Algorithm 2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import constrained, ssca
+from repro.core.schedules import (PowerLaw, SSCASchedules, paper_schedules,
+                                  strict_schedules)
+
+
+class TestSchedules:
+    def test_power_law_values(self):
+        rho = PowerLaw(0.9, 0.3)
+        assert float(rho(1)) == pytest.approx(0.9)
+        assert float(rho(8)) == pytest.approx(0.9 / 8 ** 0.3, rel=1e-6)
+
+    def test_paper_table(self):
+        for b, (a1, a2, alpha) in {1: (0.4, 0.4, 0.4), 10: (0.6, 0.9, 0.3),
+                                   100: (0.9, 0.9, 0.3)}.items():
+            rho, gamma = paper_schedules(b)
+            assert rho.a == a1 and gamma.a == a2
+            assert rho.alpha == alpha
+            assert gamma.alpha == pytest.approx(alpha + 0.05)
+
+    def test_condition_5_validation(self):
+        # gamma/rho -> 0 violated
+        with pytest.raises(ValueError):
+            SSCASchedules(PowerLaw(0.9, 0.6), PowerLaw(0.9, 0.55))
+        # sum gamma^2 = inf violated
+        with pytest.raises(ValueError):
+            SSCASchedules(PowerLaw(0.9, 0.3), PowerLaw(0.9, 0.4))
+        strict_schedules()  # valid by construction
+
+
+def _quadratic_problem(seed=0, n=64, d=6):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w_true = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    y = x @ w_true
+    def loss(w, batch):
+        xb, yb = batch
+        r = xb @ w - yb
+        return jnp.mean(r * r)
+    return x, y, w_true, loss
+
+
+class TestAlgorithm1:
+    def test_converges_to_optimum_full_batch(self):
+        x, y, w_true, loss = _quadratic_problem()
+        hp = ssca.SSCAHyperParams(tau=0.5, lam=0.0, rho=PowerLaw(0.9, 0.4),
+                                  gamma=PowerLaw(0.9, 0.5))
+        rd = jax.jit(ssca.round_fn(loss, hp))
+        w = jnp.zeros_like(w_true)
+        st = ssca.init(w)
+        for _ in range(400):
+            w, st = rd(w, st, (x, y), 1.0)
+        kkt = float(ssca.kkt_residual(jax.grad(loss)(w, (x, y))))
+        assert kkt < 1e-2
+        assert float(jnp.linalg.norm(w - w_true)) < 0.05
+
+    def test_kkt_residual_decreases_stochastic(self):
+        x, y, _, loss = _quadratic_problem(n=256)
+        hp = ssca.SSCAHyperParams(tau=0.5, rho=PowerLaw(0.9, 0.4),
+                                  gamma=PowerLaw(0.9, 0.5))
+        rd = jax.jit(ssca.round_fn(loss, hp))
+        w = jnp.zeros((6,))
+        st = ssca.init(w)
+        rng = np.random.default_rng(0)
+        res = []
+        for t in range(300):
+            idx = rng.choice(256, size=32, replace=False)
+            w, st = rd(w, st, (x[idx], y[idx]), 1.0)
+            if t % 100 == 99:
+                res.append(float(ssca.kkt_residual(
+                    jax.grad(loss)(w, (x, y)))))
+        assert res[-1] < res[0]
+        assert res[-1] < 0.1
+
+    def test_solve_surrogate_closed_form_is_minimizer(self):
+        """ω̄ from (16)/(17) must minimize F̄ — check against perturbations."""
+        hp = ssca.SSCAHyperParams(tau=0.3, lam=0.01)
+        w = {"a": jnp.asarray([1.0, -2.0]), "b": jnp.asarray([[0.5]])}
+        st = ssca.SSCAState(step=jnp.asarray(3),
+                            lin=jax.tree.map(lambda x: x * 0.7, w),
+                            beta=jax.tree.map(lambda x: x * -0.2, w))
+        wbar = ssca.solve_surrogate(st, hp)
+        f0 = ssca.surrogate_value(st, hp, wbar)
+        for eps in (0.01, -0.02):
+            wp = jax.tree.map(lambda x: x + eps, wbar)
+            assert float(ssca.surrogate_value(st, hp, wp)) > float(f0)
+
+    def test_beta_none_when_lam_zero(self):
+        st = ssca.init({"w": jnp.ones(3)}, with_beta=False)
+        assert st.beta is None
+        hp = ssca.SSCAHyperParams(tau=0.1, lam=0.0)
+        p, st2 = ssca.server_update(st, {"w": jnp.ones(3)},
+                                    {"w": jnp.ones(3)}, hp)
+        assert st2.beta is None
+        assert np.isfinite(np.asarray(p["w"])).all()
+
+    def test_ema_recursion_matches_definition(self):
+        """lin^t must equal the unrolled eq. (2) weights."""
+        hp = ssca.SSCAHyperParams(tau=0.2, rho=PowerLaw(0.8, 0.5),
+                                  gamma=PowerLaw(0.0001, 0.6))
+        w = jnp.asarray([0.0])
+        gs = [jnp.asarray([1.0]), jnp.asarray([2.0]), jnp.asarray([-1.0])]
+        st = ssca.init(w)
+        cur_w = w
+        lin_manual = jnp.zeros(1)
+        for t, g in enumerate(gs, start=1):
+            rho = float(hp.rho(t))
+            lin_manual = (1 - rho) * lin_manual \
+                + rho * (g - 2 * hp.tau * cur_w)
+            cur_w, st = ssca.server_update(st, cur_w, g, hp)
+        np.testing.assert_allclose(np.asarray(st.lin), np.asarray(lin_manual),
+                                   rtol=1e-5)
+
+
+class TestAlgorithm2:
+    def test_constraint_active_at_limit(self):
+        """min ‖w‖² s.t. mse ≤ U: cost should land on U with minimal norm."""
+        x, y, w_true, cost = _quadratic_problem(seed=1)
+        u = 0.5
+        hp = constrained.ConstrainedHyperParams(
+            tau=0.5, c=1e4, rho=PowerLaw(0.9, 0.4), gamma=PowerLaw(0.9, 0.5))
+        rd = jax.jit(constrained.round_fn(cost, u, hp))
+        w = jnp.zeros_like(w_true)
+        st = constrained.init(w)
+        for _ in range(500):
+            w, st = rd(w, st, (x, y), 1.0)
+        assert float(cost(w, (x, y))) == pytest.approx(u, abs=0.02)
+        assert float(jnp.sum(w * w)) < float(jnp.sum(w_true * w_true))
+        assert float(st.slack[0]) < 1e-3
+
+    def test_infeasible_limit_gives_positive_slack(self):
+        """U below the attainable minimum ⇒ slack stays positive
+        (Theorem 2: s* = 0 only when the problem is feasible)."""
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(32, 4)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(32,)), jnp.float32)  # noise: mse>0
+
+        def cost(w, batch):
+            xb, yb = batch
+            r = xb @ w - yb
+            return jnp.mean(r * r)
+
+        hp = constrained.ConstrainedHyperParams(
+            tau=0.5, c=100.0, rho=PowerLaw(0.9, 0.4),
+            gamma=PowerLaw(0.9, 0.5))
+        rd = jax.jit(constrained.round_fn(cost, -1.0, hp))  # impossible U
+        w = jnp.zeros((4,))
+        st = constrained.init(w)
+        for _ in range(200):
+            w, st = rd(w, st, (x, y), 1.0)
+        assert float(st.slack[0]) > 0.5
+
+    def test_lemma1_matches_dual_solver(self):
+        """The closed form (21)–(23) must agree with generic dual ascent."""
+        rng = np.random.default_rng(3)
+        lin = {"w": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+        tau, c, a_t, u = 0.3, 50.0, 0.7, 0.2
+        w1, s1, nu1 = constrained.solve_lemma1(lin, a_t, u, tau, c)
+        lin_stacked = jax.tree.map(lambda x: x[None], lin)
+        zeros = jax.tree.map(jnp.zeros_like, lin)
+        w2, s2, nu2 = constrained.solve_dual(
+            zeros, zeros, 0.0, 1.0, lin_stacked,
+            jnp.asarray([a_t - u]), tau, c, iters=4000, lr=2.0)
+        np.testing.assert_allclose(np.asarray(w1["w"]), np.asarray(w2["w"]),
+                                   atol=2e-3)
+        assert float(abs(s1 - s2[0])) < 5e-3
+
+    def test_penalty_continuation_validation(self):
+        with pytest.raises(ValueError):
+            constrained.penalty_continuation([10.0, 5.0])
+        assert constrained.penalty_continuation([1., 10., 100.]) == \
+            [1., 10., 100.]
