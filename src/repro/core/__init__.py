@@ -9,5 +9,8 @@ Public surface:
 * :mod:`repro.core.constrained` — Algorithm 2 (exact penalty) with the
   Lemma-1 closed form and a generic dual solver.
 * :mod:`repro.core.fedavg` — the SGD-based baselines [3]-[5].
+* :mod:`repro.core.protocol` — the ``FedAlgorithm`` interface all four
+  algorithms implement; consumed by :mod:`repro.fed.engine`.
 """
-from repro.core import constrained, fedavg, schedules, ssca  # noqa: F401
+from repro.core import (constrained, fedavg, protocol, schedules,  # noqa: F401
+                        ssca)

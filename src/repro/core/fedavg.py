@@ -45,13 +45,14 @@ def fedsgd_round(loss_fn: Callable[[PyTree, Any], jnp.ndarray],
     return one_round
 
 
-def fedavg_round(loss_fn: Callable[[PyTree, Any], jnp.ndarray],
-                 hp: SGDHyperParams):
-    """FedAvg [3]: per-client E local SGD(+momentum) steps, then weighted
-    model average.
+def local_sgd(loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+              hp: SGDHyperParams):
+    """The client-side E-step local SGD(+momentum) loop of FedAvg.
 
-    ``client_batches`` has a leading axis (I, E, ...) — one E-sequence of
-    mini-batches per client; ``client_weights`` is (I,) with Σ = 1 (N_i/N).
+    Returns ``local_update(params, batches_e, lr)`` where ``batches_e`` is
+    a pytree with a leading E axis (scanned over).  Exposed separately so
+    the unified engine (:mod:`repro.fed.engine`) can use it as the FedAvg
+    ``client_upload`` while :func:`fedavg_round` keeps the legacy shape.
     """
     from repro import optim
 
@@ -70,6 +71,19 @@ def fedavg_round(loss_fn: Callable[[PyTree, Any], jnp.ndarray],
 
         (out, _), _ = jax.lax.scan(step, (params, st0), batches_e)
         return out
+
+    return local_update
+
+
+def fedavg_round(loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+                 hp: SGDHyperParams):
+    """FedAvg [3]: per-client E local SGD(+momentum) steps, then weighted
+    model average.
+
+    ``client_batches`` has a leading axis (I, E, ...) — one E-sequence of
+    mini-batches per client; ``client_weights`` is (I,) with Σ = 1 (N_i/N).
+    """
+    local_update = local_sgd(loss_fn, hp)
 
     def one_round(params, client_batches, client_weights, t):
         lr = hp.lr(t)

@@ -1,0 +1,227 @@
+"""The ``FedAlgorithm`` protocol — one interface for all four algorithms.
+
+The journal extension of the source paper (arXiv:2104.06011) treats the
+sample-based and feature-based SSCA variants as one family behind a shared
+surrogate-update interface, and the underlying CSSCA framework
+(arXiv:1801.08266) is agnostic to how the stochastic estimate is
+aggregated.  This module encodes both facts structurally: every federated
+algorithm is a triple
+
+    init_state(params)                  -> state            (server side)
+    client_upload(params, state, batch) -> message          (per client)
+    server_step(params, state, agg)     -> (params, state)  (server side)
+
+where ``agg`` is the *aggregated* client message — produced by any
+strategy from :mod:`repro.fed.aggregation` (plain sum, secure masking,
+partial participation).  The generic driver in :mod:`repro.fed.engine`
+runs any ``FedAlgorithm`` × any aggregation as one ``lax.scan`` over
+rounds.
+
+Aggregation semantics are declared, not hard-coded:
+
+* ``combine = "sum"`` — the upload is a per-sample-weighted statistic
+  (the mini-batch gradient of Σ_n w_n ℓ_n); ``batch`` is ``(x, y, w)``
+  with ``w`` the eq.-(2) weights N_i/(B·N).  The upload map must be
+  *additive in the batch*:
+
+      upload(batch_i ⊎ batch_j) == upload(batch_i) + upload(batch_j)
+
+  This lets the engine evaluate linear aggregations (plain, sampled)
+  directly on the concatenated weighted super-batch — one gradient, no
+  per-client message tensors — while non-linear strategies (secure
+  masking) call ``client_upload`` per client on its own (x, y, λ_i·1)
+  slice and combine the explicit messages.  Both paths compute the same
+  aggregate.
+* ``combine = "mean"`` — messages are per-client *models* (FedAvg);
+  ``batch`` is ``(x, y)`` and the aggregator forms a weighted average
+  with λ_i = N_i/N, re-normalized over the participating subset.
+
+All methods must be jit/vmap/scan-compatible: ``state`` is a pytree of
+arrays, ``client_upload`` is vmapped over the leading client axis of
+``batch``, and ``server_step`` runs inside the scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constrained, fedavg, ssca
+
+PyTree = Any
+
+
+@runtime_checkable
+class FedAlgorithm(Protocol):
+    """Structural interface consumed by :func:`repro.fed.engine.run`."""
+
+    combine: str        # "sum" | "mean"
+    local_steps: int    # E — mini-batches per client per round
+
+    def init_state(self, params: PyTree) -> PyTree: ...
+
+    def client_upload(self, params: PyTree, state: PyTree,
+                      batch: Any) -> PyTree: ...
+
+    def server_step(self, params: PyTree, state: PyTree,
+                    agg: PyTree) -> tuple[PyTree, PyTree]: ...
+
+    def client_weights(self, part, batch_size: int) -> np.ndarray: ...
+
+    def round_metrics(self, state: PyTree) -> Dict[str, float]: ...
+
+    def uplink_floats(self, params: PyTree) -> int: ...
+
+
+def _param_count(params: PyTree) -> int:
+    return sum(int(np.prod(w.shape)) for w in jax.tree.leaves(params))
+
+
+class _Base:
+    """Shared defaults: E=1, sum-combine with eq.-(2) weights."""
+
+    combine = "sum"
+    local_steps = 1
+
+    def client_weights(self, part, batch_size: int) -> np.ndarray:
+        return part.weights(batch_size)            # N_i / (B·N)
+
+    def round_metrics(self, state) -> Dict[str, float]:
+        return {}
+
+    def uplink_floats(self, params) -> int:
+        return _param_count(params)
+
+
+class CounterState(NamedTuple):
+    """State of the stateless SGD baselines: just the round counter t."""
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SSCAUnconstrained(_Base):
+    """Algorithm 1 (mini-batch SSCA, unconstrained) behind the protocol.
+
+    ``loss_fn(params, (x, y, w))`` is the per-sample-weighted batch sum
+    Σ_n w_n ℓ_n, so its gradient on the weighted super-batch is exactly
+    ĝ^t of eq. (2) — and the per-client gradient (w = λ_i) is the secure
+    upload q0.
+
+    ``fused=True`` routes the server update through the Pallas fused
+    kernel (:mod:`repro.kernels.ssca_update`); the tree-map path is the
+    fallback and the numerical reference.
+    """
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray]
+    hp: ssca.SSCAHyperParams
+    fused: bool = False
+
+    def init_state(self, params):
+        return ssca.init(params)
+
+    def client_upload(self, params, state, batch):
+        return jax.grad(self.loss_fn)(params, batch)
+
+    def server_step(self, params, state, agg):
+        return ssca.server_update(state, params, agg, self.hp,
+                                  fused=self.fused)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSCAConstrained(_Base):
+    """Algorithm 2 (constrained, exact penalty) behind the protocol.
+
+    The upload is q1 = (mini-batch cost value, gradient); the objective
+    ‖ω‖² is known to the server, so q0 needs no upload (paper §V-B).
+    Secure aggregation of this tuple is what the paper's §III-B requires
+    and the seed omitted: both the value and the gradient are masked.
+    """
+    cost_fn: Callable[[PyTree, Any], jnp.ndarray]   # weighted batch sum
+    limit_u: float
+    hp: constrained.ConstrainedHyperParams
+
+    def init_state(self, params):
+        return constrained.init(params, num_constraints=1)
+
+    def client_upload(self, params, state, batch):
+        return jax.value_and_grad(self.cost_fn)(params, batch)
+
+    def server_step(self, params, state, agg):
+        val, grad = agg
+        t = state.step.astype(jnp.float32)
+        rho, gamma = self.hp.rho(t), self.hp.gamma(t)
+        grads = jax.tree.map(lambda g: g[None], grad)        # stack M=1
+        state = constrained.update_constraint_surrogate(
+            state, params, jnp.reshape(val, (1,)), grads, self.hp.tau, rho)
+        lin1 = jax.tree.map(lambda l: l[0], state.lin_c)
+        omega_bar, s, _ = constrained.solve_lemma1(
+            lin1, state.a_c[0], self.limit_u, self.hp.tau, self.hp.c)
+        new_params = jax.tree.map(
+            lambda w, wb: (1.0 - gamma) * w + gamma * wb, params, omega_bar)
+        new_state = state._replace(step=state.step + 1, slack=s[None])
+        return new_params, new_state
+
+    def round_metrics(self, state):
+        return {"slack": float(state.slack[0])}
+
+    def uplink_floats(self, params):
+        return _param_count(params) + 1                      # + the value
+
+
+@dataclasses.dataclass(frozen=True)
+class FedSGD(_Base):
+    """E = 1 SGD baseline [3],[4] on F(ω) + λ‖ω‖².
+
+    The ℓ2 term is server-side (its gradient 2λω needs no data), so the
+    client upload is the plain weighted mini-batch gradient — identical
+    uplink to Algorithm 1.
+    """
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray]   # weighted batch sum
+    hp: fedavg.SGDHyperParams
+    lam: float = 0.0
+
+    def init_state(self, params):
+        return CounterState(step=jnp.asarray(1, jnp.int32))
+
+    def client_upload(self, params, state, batch):
+        return jax.grad(self.loss_fn)(params, batch)
+
+    def server_step(self, params, state, agg):
+        lr = self.hp.lr(state.step.astype(jnp.float32))
+        g = jax.tree.map(lambda gg, w: gg + 2.0 * self.lam * w, agg, params)
+        new_params = jax.tree.map(lambda w, gg: w - lr * gg, params, g)
+        return new_params, CounterState(step=state.step + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvg(_Base):
+    """FedAvg [3] / parallel-restarted SGD [5]: E local steps, model avg.
+
+    The upload is the locally-updated *model*; ``combine="mean"`` tells the
+    aggregation layer to average with λ_i = N_i/N (re-normalized over the
+    sampled subset under partial participation — standard FedAvg client
+    sampling).
+    """
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray]   # local objective (mean)
+    hp: fedavg.SGDHyperParams
+
+    combine = "mean"
+
+    @property
+    def local_steps(self) -> int:
+        return int(self.hp.local_steps)
+
+    def init_state(self, params):
+        return CounterState(step=jnp.asarray(1, jnp.int32))
+
+    def client_upload(self, params, state, batch):
+        lr = self.hp.lr(state.step.astype(jnp.float32))
+        return fedavg.local_sgd(self.loss_fn, self.hp)(params, batch, lr)
+
+    def server_step(self, params, state, agg):
+        return agg, CounterState(step=state.step + 1)
+
+    def client_weights(self, part, batch_size: int) -> np.ndarray:
+        return (part.sizes / part.total).astype(np.float32)  # N_i / N

@@ -87,15 +87,40 @@ def solve_surrogate(state: SSCAState, hp: SSCAHyperParams) -> PyTree:
 
 
 def server_update(state: SSCAState, params: PyTree, grad_agg: PyTree,
-                  hp: SSCAHyperParams) -> tuple[PyTree, SSCAState]:
+                  hp: SSCAHyperParams, *, fused: bool = False,
+                  interpret: Optional[bool] = None
+                  ) -> tuple[PyTree, SSCAState]:
     """One server round: recursions (14)/(15), closed form (16)/(17), move (4).
 
     ``grad_agg`` is the already-aggregated ĝ^t (sum of client messages; under
     pjit this is the psum over the (`pod`,`data`) axes).
+
+    ``fused=True`` runs the whole update as one Pallas elementwise pass
+    (:mod:`repro.kernels.ssca_update`) — one HBM read of (ω, lin, β, ĝ)
+    and one write of (ω', lin', β') instead of four round-trips.
+    ``interpret`` defaults to True off-TPU (the kernel's validation mode);
+    both paths compute identical math in f32.
     """
     t = state.step.astype(jnp.float32)
     rho = hp.rho(t)
     gamma = hp.gamma(t)
+
+    if fused:
+        from repro.kernels import ops
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        beta_in = state.beta if state.beta is not None \
+            else jax.tree.map(jnp.zeros_like, params)
+        new_params, lin, beta = ops.ssca_update(
+            params, state.lin, grad_agg, beta_in, rho=rho, gamma=gamma,
+            tau=hp.tau, lam=hp.lam, interpret=interpret)
+        # match the reference path exactly: β only advances when λ > 0
+        # (the kernel's β' is discarded otherwise, like the ema() skip)
+        new_state = SSCAState(
+            step=state.step + 1, lin=lin,
+            beta=beta if (state.beta is not None and hp.lam)
+            else state.beta)
+        return new_params, new_state
 
     lin = ema(state.lin,
               jax.tree.map(lambda g, w: g - 2.0 * hp.tau * w, grad_agg, params),

@@ -62,13 +62,62 @@ def dirichlet(labels: np.ndarray, num_clients: int, alpha: float = 0.5,
                      np.asarray([len(ix) for ix in indices], np.int64))
 
 
+def _padded_indices(partition: Partition, width: int) -> np.ndarray:
+    """(I, width) index matrix, rows right-padded with the row's first
+    index (never selected — padded key slots are +inf)."""
+    out = np.empty((partition.num_clients, width), np.int64)
+    for i, idx in enumerate(partition.indices):
+        out[i, :len(idx)] = idx
+        out[i, len(idx):] = idx[0]
+    return out
+
+
+def sample_schedule(partition: Partition, batch_size: int,
+                    round_ids, seed: int = 0) -> np.ndarray:
+    """All rounds' mini-batches in one vectorized draw: (T, I, B) indices.
+
+    Draws are **seed-stable**: the batch of round t depends only on
+    (seed, t) and the partition — so algorithms sharing a seed and round
+    ids see identical batches (paired convergence comparisons), and the
+    whole schedule can be staged on device once instead of per round.
+    Each round uses one Generator vectorized across all clients
+    (random-key argpartition for the without-replacement draw) — replacing
+    the seed's per-client-per-round ``SeedSequence`` + ``choice`` loop.
+
+    Clients with N_i ≥ B sample without replacement, smaller clients with
+    replacement, matching :func:`sample_minibatches`'s contract.
+    """
+    round_ids = np.asarray(round_ids, np.int64)
+    sizes = partition.sizes
+    i_cl = partition.num_clients
+    width = max(int(sizes.max()), batch_size)
+    padded = _padded_indices(partition, width)
+    valid = np.arange(width)[None, :] < sizes[:, None]       # (I, W)
+    no_repl = sizes >= batch_size                            # per-client mode
+
+    out = np.empty((len(round_ids), i_cl, batch_size), np.int64)
+    any_repl = bool((~no_repl).any())
+    for k, t in enumerate(round_ids):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, int(t)]))
+        keys = rng.random((i_cl, width), dtype=np.float32)
+        keys[~valid] = np.inf
+        # uniform B-subset per row: the B smallest of N_i iid uniform keys
+        sel = np.argpartition(keys, batch_size - 1, axis=1)[:, :batch_size]
+        out[k] = np.take_along_axis(padded, sel, axis=1)
+        if any_repl:
+            # with-replacement fallback for clients smaller than the batch
+            u = rng.random((i_cl, batch_size))
+            wr = np.take_along_axis(
+                padded, (u * sizes[:, None]).astype(np.int64), axis=1)
+            out[k] = np.where(no_repl[:, None], out[k], wr)
+    return out
+
+
 def sample_minibatches(partition: Partition, batch_size: int, round_idx: int,
                        seed: int = 0) -> np.ndarray:
-    """Each client's uniformly random mini-batch N_i^(t); (I, B) indices."""
-    out = np.empty((partition.num_clients, batch_size), np.int64)
-    for i, idx in enumerate(partition.indices):
-        rng = np.random.default_rng(
-            np.random.SeedSequence([seed, round_idx, i]))
-        out[i] = rng.choice(idx, size=batch_size,
-                            replace=len(idx) < batch_size)
-    return out
+    """Each client's uniformly random mini-batch N_i^(t); (I, B) indices.
+
+    Single-round view of :func:`sample_schedule` — same (seed, round)
+    always yields the same draw, shared across algorithms.
+    """
+    return sample_schedule(partition, batch_size, [round_idx], seed)[0]

@@ -1,248 +1,154 @@
 """Single-host federated simulation runtime (the paper's experimental rig).
 
-Simulates the server + I clients of Section II: at round t every client
-draws a size-B mini-batch from its local shard, computes its upload, and
-the server aggregates and updates.  All four algorithms of Section VI run
-through this driver:
+Simulates the server + I clients of Section II.  All four algorithms of
+Section VI are thin wrappers over the unified scan-chunked driver in
+:mod:`repro.fed.engine` — one :class:`repro.core.protocol.FedAlgorithm`
+instance each, composed with any :mod:`repro.fed.aggregation` strategy:
 
 * Algorithm 1 (mini-batch SSCA, unconstrained)      — ``run_alg1``
 * Algorithm 2 (mini-batch SSCA, constrained)        — ``run_alg2``
 * FedSGD / SGD with E=1 [3],[4]                     — ``run_fedsgd``
 * FedAvg / parallel-restarted SGD with E>1 [3],[5]  — ``run_fedavg``
 
+Every runner accepts ``aggregation=`` (plain sum by default; see
+:func:`repro.fed.aggregation.secure` and
+:func:`repro.fed.aggregation.sampled`), so secure aggregation and partial
+client participation work for *all four* algorithms — including secure
+Algorithm 2, per the paper's §III-B.
+
 The mini-batch schedule is shared across algorithms (same seed ⇒ same
-sample draws) so convergence comparisons are paired.
+sample draws) so convergence comparisons are paired.  The seed's
+per-round drivers live on in :mod:`repro.fed.legacy` as the numerical
+reference.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import constrained, fedavg, ssca
+from repro.core import constrained, fedavg, protocol, ssca
 from repro.core.schedules import paper_schedules, sgd_learning_rate
-from repro.data.partition import Partition, sample_minibatches
+from repro.data.partition import Partition
+from repro.fed import aggregation as agg_mod
+from repro.fed import engine
+from repro.fed.engine import History  # noqa: F401  (public re-export)
+# Back-compat: the seed exposed these here; tests/benchmarks import them.
+from repro.fed.legacy import _round_batch, _weighted_ce_sum  # noqa: F401
 from repro.mlpapp import model as mlp
 
-
-@dataclasses.dataclass
-class History:
-    """Per-round diagnostics; the benchmarks turn these into the figures."""
-    rounds: List[int] = dataclasses.field(default_factory=list)
-    train_cost: List[float] = dataclasses.field(default_factory=list)
-    test_accuracy: List[float] = dataclasses.field(default_factory=list)
-    sparsity: List[float] = dataclasses.field(default_factory=list)
-    slack: List[float] = dataclasses.field(default_factory=list)
-    uplink_floats_per_round: int = 0
-    wall_seconds: float = 0.0
-
-    def as_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+_evaluator = engine.evaluator   # back-compat alias
 
 
-def _round_batch(data, part: Partition, batch_size: int, t: int, seed: int):
-    """Gather every client's mini-batch into one weighted super-batch."""
-    idx = sample_minibatches(part, batch_size, t, seed)      # (I, B)
-    flat = idx.reshape(-1)
-    x = jnp.asarray(data.x_train[flat])
-    y = jnp.asarray(data.y_train[flat])
-    w = np.repeat(part.weights(batch_size), batch_size)      # N_i/(B·N) each
-    return x, y, jnp.asarray(w)
+@functools.lru_cache(maxsize=None)
+def _fedavg_local_loss(lam: float):
+    """Per-λ local FedAvg objective, cached so equal ``run_fedavg`` calls
+    build identical (hashable-equal) algorithm instances — which lets the
+    engine reuse one compiled chunk across runs."""
+    def local_loss(p, batch):
+        reg = sum(jnp.vdot(w, w) for w in jax.tree.leaves(p)).real
+        return mlp.cross_entropy(p, batch) + lam * reg
+    return local_loss
 
 
-def _evaluator(data, eval_samples: int, seed: int = 123):
-    rng = np.random.default_rng(seed)
-    tr = rng.choice(len(data.x_train), size=min(eval_samples,
-                                                len(data.x_train)),
-                    replace=False)
-    xe_tr = jnp.asarray(data.x_train[tr]); ye_tr = jnp.asarray(data.y_train[tr])
-    xe_te = jnp.asarray(data.x_test); ye_te = jnp.asarray(data.y_test)
-
-    # eval data passed as jit arguments (a closure would embed them as HLO
-    # constants and trigger multi-second constant folding per compile)
-    @jax.jit
-    def _measure(params, x_tr, y_tr, x_te, y_te):
-        return (mlp.cross_entropy(params, (x_tr, y_tr)),
-                mlp.accuracy(params, x_te, y_te),
-                mlp.sparsity(params))
-
-    def measure(params):
-        return _measure(params, xe_tr, ye_tr, xe_te, ye_te)
-    return measure
+def _resolve_aggregation(aggregation, secure: bool):
+    """``secure=True`` is shorthand for ``aggregation=secure()``; passing
+    both is ambiguous and refused rather than silently dropping one."""
+    if secure and aggregation is not None:
+        raise ValueError(
+            "pass either secure=True or an explicit aggregation=, not both")
+    return agg_mod.secure() if secure else aggregation
 
 
-def _record(hist: History, t: int, measure, params, slack: float = 0.0):
-    cost, acc, sp = measure(params)
-    hist.rounds.append(t)
-    hist.train_cost.append(float(cost))
-    hist.test_accuracy.append(float(acc))
-    hist.sparsity.append(float(sp))
-    hist.slack.append(float(slack))
-
-
-def _weighted_ce_sum(params, batch):
-    """Σ_n w_n · ce_n — so grad = ĝ^t of eq. (2) with exact paper weights."""
-    x, y, w = batch
-    logp = jax.nn.log_softmax(mlp.logits(params, x), axis=-1)
-    return -jnp.sum(w * jnp.sum(y * logp, axis=-1))
+def _init(data, seed: int, hidden: int, params):
+    k, l = data.x_train.shape[1], data.y_train.shape[1]
+    if params is None:
+        params = mlp.init_params(jax.random.key(seed), k, hidden, l)
+    return params
 
 
 def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
              lam: float = 1e-5, tau: float = 0.1, seed: int = 0,
              params: Optional[mlp.MLPParams] = None,
              hidden: int = 128, eval_every: int = 1,
-             eval_samples: int = 10000,
-             secure: bool = False) -> tuple[mlp.MLPParams, History]:
+             eval_samples: int = 10000, secure: bool = False,
+             fused: bool = False,
+             aggregation: Optional[agg_mod.Aggregation] = None
+             ) -> tuple[mlp.MLPParams, History]:
     """Algorithm 1 on the eq.-(11) objective F(ω) + λ‖ω‖².
 
-    ``secure=True`` routes per-client messages through the pairwise-mask
-    secure-aggregation layer (repro.fed.secure) — bitwise-identical math
-    (masks cancel in the sum), the server never sees an individual q0.
+    ``secure=True`` is shorthand for ``aggregation=aggregation.secure()``
+    (Bonawitz-style pairwise masking in Z_{2^32} — the server only ever
+    sees Σ_i q_i).  ``fused=True`` runs the server update through the
+    Pallas fused kernel.
     """
-    from repro.fed import secure as secure_mod
-
-    k, l = data.x_train.shape[1], data.y_train.shape[1]
-    if params is None:
-        params = mlp.init_params(jax.random.key(seed), k, hidden, l)
+    params = _init(data, seed, hidden, params)
     rho, gamma = paper_schedules(batch_size)
     hp = ssca.SSCAHyperParams(tau=tau, lam=lam, rho=rho, gamma=gamma)
-    one_round = jax.jit(ssca.round_fn(_weighted_ce_sum, hp))
-    grad_fn = jax.grad(_weighted_ce_sum)
-    n_clients = part.num_clients
-    session_key = jax.random.key(seed + 10_000)
-
-    @jax.jit
-    def secure_round(params, state, xs, ys, ws, round_idx):
-        """xs: (I, B, K); per-client q0 computed, masked, aggregated."""
-        def msg(i):
-            g = grad_fn(params, (xs[i], ys[i], ws[i]))
-            return secure_mod.mask_message(g, session_key, i, n_clients,
-                                           round_idx)
-        agg = msg(0)
-        for i in range(1, n_clients):
-            agg = jax.tree.map(jnp.add, agg, msg(i))
-        return ssca.server_update(state, params, agg, hp)
-
-    state = ssca.init(params)
-    measure = _evaluator(data, eval_samples)
-    hist = History(uplink_floats_per_round=sum(
-        int(np.prod(w.shape)) for w in jax.tree.leaves(params)))
-    t0 = time.time()
-    for t in range(1, rounds + 1):
-        if secure:
-            idx = sample_minibatches(part, batch_size, t, seed)   # (I, B)
-            xs = jnp.asarray(data.x_train[idx])
-            ys = jnp.asarray(data.y_train[idx])
-            w_i = part.weights(batch_size)
-            ws = jnp.broadcast_to(
-                jnp.asarray(w_i)[:, None], idx.shape)
-            params, state = secure_round(params, state, xs, ys, ws, t)
-        else:
-            batch = _round_batch(data, part, batch_size, t, seed)
-            params, state = one_round(params, state, batch)
-        if t % eval_every == 0 or t == rounds:
-            _record(hist, t, measure, params)
-    hist.wall_seconds = time.time() - t0
-    return params, hist
+    alg = protocol.SSCAUnconstrained(loss_fn=_weighted_ce_sum, hp=hp,
+                                     fused=fused)
+    aggregation = _resolve_aggregation(aggregation, secure)
+    return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
+                      params=params, seed=seed, eval_every=eval_every,
+                      eval_samples=eval_samples, aggregation=aggregation)
 
 
 def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
              limit_u: float = 0.13, tau: float = 0.1, c: float = 1e5,
              seed: int = 0, params: Optional[mlp.MLPParams] = None,
              hidden: int = 128, eval_every: int = 1,
-             eval_samples: int = 10000) -> tuple[mlp.MLPParams, History]:
-    """Algorithm 2 on eq. (18): min ‖ω‖² s.t. F(ω) ≤ U."""
-    k, l = data.x_train.shape[1], data.y_train.shape[1]
-    if params is None:
-        params = mlp.init_params(jax.random.key(seed), k, hidden, l)
+             eval_samples: int = 10000, secure: bool = False,
+             aggregation: Optional[agg_mod.Aggregation] = None
+             ) -> tuple[mlp.MLPParams, History]:
+    """Algorithm 2 on eq. (18): min ‖ω‖² s.t. F(ω) ≤ U.
+
+    ``secure=True`` masks the (value, gradient) upload q1 — the secure
+    constrained variant the paper's §III-B requires."""
+    params = _init(data, seed, hidden, params)
     rho, gamma = paper_schedules(batch_size)
-    hp = constrained.ConstrainedHyperParams(tau=tau, c=c, rho=rho, gamma=gamma)
-    one_round = jax.jit(constrained.round_fn(_weighted_ce_sum, limit_u, hp))
-    state = constrained.init(params)
-    measure = _evaluator(data, eval_samples)
-    hist = History(uplink_floats_per_round=sum(
-        int(np.prod(w.shape)) for w in jax.tree.leaves(params)) + 1)
-    t0 = time.time()
-    for t in range(1, rounds + 1):
-        batch = _round_batch(data, part, batch_size, t, seed)
-        params, state = one_round(params, state, batch)
-        if t % eval_every == 0 or t == rounds:
-            _record(hist, t, measure, params, slack=float(state.slack[0]))
-    hist.wall_seconds = time.time() - t0
-    return params, hist
+    hp = constrained.ConstrainedHyperParams(tau=tau, c=c, rho=rho,
+                                            gamma=gamma)
+    alg = protocol.SSCAConstrained(cost_fn=_weighted_ce_sum,
+                                   limit_u=limit_u, hp=hp)
+    aggregation = _resolve_aggregation(aggregation, secure)
+    return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
+                      params=params, seed=seed, eval_every=eval_every,
+                      eval_samples=eval_samples, aggregation=aggregation)
 
 
 def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
                lam: float = 1e-5, lr_a: float = 0.5, lr_alpha: float = 0.3,
                seed: int = 0, params: Optional[mlp.MLPParams] = None,
                hidden: int = 128, eval_every: int = 1,
-               eval_samples: int = 10000) -> tuple[mlp.MLPParams, History]:
+               eval_samples: int = 10000,
+               aggregation: Optional[agg_mod.Aggregation] = None
+               ) -> tuple[mlp.MLPParams, History]:
     """E = 1 SGD baseline [3],[4] on the same objective as Algorithm 1."""
-    k, l = data.x_train.shape[1], data.y_train.shape[1]
-    if params is None:
-        params = mlp.init_params(jax.random.key(seed), k, hidden, l)
-
-    def loss(p, batch):
-        reg = sum(jnp.vdot(w, w) for w in jax.tree.leaves(p)).real
-        return _weighted_ce_sum(p, batch) + lam * reg
-
+    params = _init(data, seed, hidden, params)
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha))
-    one_round = jax.jit(fedavg.fedsgd_round(loss, hp))
-    measure = _evaluator(data, eval_samples)
-    hist = History(uplink_floats_per_round=sum(
-        int(np.prod(w.shape)) for w in jax.tree.leaves(params)))
-    t0 = time.time()
-    for t in range(1, rounds + 1):
-        x, y, w = _round_batch(data, part, batch_size, t, seed)
-        params = one_round(params, (x, y, w), jnp.float32(t))
-        if t % eval_every == 0 or t == rounds:
-            _record(hist, t, measure, params)
-    hist.wall_seconds = time.time() - t0
-    return params, hist
+    alg = protocol.FedSGD(loss_fn=_weighted_ce_sum, hp=hp, lam=lam)
+    return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
+                      params=params, seed=seed, eval_every=eval_every,
+                      eval_samples=eval_samples, aggregation=aggregation)
 
 
 def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
                local_steps: int = 2, lam: float = 1e-5, lr_a: float = 0.5,
                lr_alpha: float = 0.3, seed: int = 0,
                params: Optional[mlp.MLPParams] = None, hidden: int = 128,
-               eval_every: int = 1,
-               eval_samples: int = 10000) -> tuple[mlp.MLPParams, History]:
+               eval_every: int = 1, eval_samples: int = 10000,
+               aggregation: Optional[agg_mod.Aggregation] = None
+               ) -> tuple[mlp.MLPParams, History]:
     """FedAvg [3] / PR-SGD [5]: E local steps per round, then model average.
 
     Per-client batches are (I, E, B) samples; aggregation weight N_i/N.
     """
-    k, l = data.x_train.shape[1], data.y_train.shape[1]
-    if params is None:
-        params = mlp.init_params(jax.random.key(seed), k, hidden, l)
-
-    def loss(p, batch):
-        x, y = batch
-        reg = sum(jnp.vdot(w, w) for w in jax.tree.leaves(p)).real
-        return mlp.cross_entropy(p, (x, y)) + lam * reg
-
+    params = _init(data, seed, hidden, params)
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha),
                                local_steps=local_steps)
-    one_round = jax.jit(fedavg.fedavg_round(loss, hp))
-    cw = jnp.asarray(part.sizes / part.total, jnp.float32)
-    measure = _evaluator(data, eval_samples)
-    hist = History(uplink_floats_per_round=sum(
-        int(np.prod(w.shape)) for w in jax.tree.leaves(params)))
-    t0 = time.time()
-    for t in range(1, rounds + 1):
-        xs, ys = [], []
-        for e in range(local_steps):
-            idx = sample_minibatches(part, batch_size,
-                                     t * 1000 + e, seed)     # (I, B)
-            xs.append(data.x_train[idx])
-            ys.append(data.y_train[idx])
-        xb = jnp.asarray(np.stack(xs, 1))   # (I, E, B, K)
-        yb = jnp.asarray(np.stack(ys, 1))
-        params = one_round(params, (xb, yb), cw, jnp.float32(t))
-        if t % eval_every == 0 or t == rounds:
-            _record(hist, t, measure, params)
-    hist.wall_seconds = time.time() - t0
-    return params, hist
+    alg = protocol.FedAvg(loss_fn=_fedavg_local_loss(lam), hp=hp)
+    return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
+                      params=params, seed=seed, eval_every=eval_every,
+                      eval_samples=eval_samples, aggregation=aggregation)

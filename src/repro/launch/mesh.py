@@ -19,11 +19,31 @@ HBM_BW = 819e9                  # bytes/s per chip
 ICI_BW = 50e9                   # bytes/s per link
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and
+    ``AxisType.Auto``) exist only from jax 0.5; on older runtimes the
+    plain call has identical semantics (Auto is the default)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """``jax.set_mesh(mesh)`` where available (jax ≥ 0.6), else the mesh's
+    own context manager (equivalent for explicitly-sharded programs, and —
+    unlike ``jax.sharding.use_mesh`` on 0.5.x — it populates the ambient
+    physical mesh that the pre-0.6 ``shard_map`` fallback reads)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple:
@@ -34,5 +54,4 @@ def data_axes(mesh) -> tuple:
 
 def make_host_mesh():
     """1-device mesh for CPU smoke runs through the same code path."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))

@@ -111,6 +111,20 @@ def moe_ffn(x, params, *, num_experts: int, k: int,
 # (B_loc, S, D) accumulator, and psums over the `model` axis to combine
 # contributions from all expert owners — the MoE combine collective.
 
+def _shard_map(f, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions: the top-level API (jax ≥ 0.6)
+    infers the mesh from context and takes ``check_vma``; the 0.4.x
+    experimental API needs the ambient physical mesh and ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax.experimental import shard_map as _sm
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    return _sm.shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_rep=False)
+
+
 def _slots_for_experts(idx_e, gates_e, e_lo, e_loc: int, cap: int, k: int):
     """Per-example slot map for experts [e_lo, e_lo+e_loc).
 
@@ -214,8 +228,7 @@ def moe_ffn_sharded(x, params, *, num_experts: int, k: int,
                     P(tp_axis, fsdp_axis, None),            # ewu
                     P(tp_axis, None, fsdp_axis))            # ewd (E, F, D)
     out_specs = (P(bspec, None, None), P(), P())
-    fn = jax.shard_map(local_fn, in_specs=in_specs, out_specs=out_specs,
-                       check_vma=False)
+    fn = _shard_map(local_fn, in_specs, out_specs)
     y, aux, dropped = fn(x, params["router"], params["wg"], params["wu"],
                          params["wd"])
     if "shared_wg" in params:

@@ -1,0 +1,278 @@
+"""Unified engine + aggregation layer: equivalence, security, sampling.
+
+Covers the refactor's contracts:
+
+* the scan-chunked engine reproduces the seed per-round drivers'
+  trajectories for all four algorithms (same seed ⇒ same train cost);
+* secure aggregation is bitwise-identical to the plain sum on
+  grid-aligned messages (mask cancellation in Z_{2^32} is exact) and
+  works for Algorithm 2's (value, gradient) upload;
+* partial-participation round weights are unbiased (sum-combine) and
+  exactly normalized (mean-combine);
+* the fused Pallas server update matches the tree-map reference;
+* the vectorized batch scheduler is seed-stable and shard-respecting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocol, ssca
+from repro.data import partition
+from repro.fed import aggregation, engine, legacy, runtime
+
+
+# ---------------------------------------------------------------------------
+# engine ≡ legacy per-round drivers (satellite: equivalence test)
+# ---------------------------------------------------------------------------
+
+CASES = [
+    ("alg1", runtime.run_alg1, legacy.run_alg1, {}),
+    ("alg2", runtime.run_alg2, legacy.run_alg2, {"limit_u": 0.4}),
+    ("fedsgd", runtime.run_fedsgd, legacy.run_fedsgd, {"lr_a": 2.0}),
+    ("fedavg", runtime.run_fedavg, legacy.run_fedavg,
+     {"local_steps": 2, "lr_a": 2.0}),
+    # E = 1 FedAvg is NOT FedSGD: one local step on the B-sample batch,
+    # model (not gradient) averaging — exercises the kept E axis.
+    ("fedavg_e1", runtime.run_fedavg, legacy.run_fedavg,
+     {"local_steps": 1, "lr_a": 2.0}),
+]
+
+
+@pytest.mark.parametrize("name,eng,leg,kw", CASES,
+                         ids=[c[0] for c in CASES])
+def test_engine_matches_legacy_trajectory(dataset, fed_partition,
+                                          name, eng, leg, kw):
+    """Same seed ⇒ same History.train_cost, scan-chunked vs per-round."""
+    _, h_eng = eng(dataset, fed_partition, batch_size=20, rounds=12,
+                   eval_every=4, eval_samples=500, seed=3, **kw)
+    _, h_leg = leg(dataset, fed_partition, batch_size=20, rounds=12,
+                   eval_every=4, eval_samples=500, seed=3, **kw)
+    assert h_eng.rounds == h_leg.rounds
+    np.testing.assert_allclose(h_eng.train_cost, h_leg.train_cost,
+                               rtol=0, atol=2e-6)
+    np.testing.assert_allclose(h_eng.test_accuracy, h_leg.test_accuracy,
+                               rtol=0, atol=1e-3)
+
+
+def test_all_algorithms_satisfy_protocol():
+    from repro.core import constrained, fedavg
+    from repro.core.schedules import paper_schedules, sgd_learning_rate
+    rho, gamma = paper_schedules(10)
+    algs = [
+        protocol.SSCAUnconstrained(
+            loss_fn=legacy._weighted_ce_sum,
+            hp=ssca.SSCAHyperParams(rho=rho, gamma=gamma)),
+        protocol.SSCAConstrained(
+            cost_fn=legacy._weighted_ce_sum, limit_u=0.5,
+            hp=constrained.ConstrainedHyperParams(rho=rho, gamma=gamma)),
+        protocol.FedSGD(loss_fn=legacy._weighted_ce_sum,
+                        hp=fedavg.SGDHyperParams(
+                            lr=sgd_learning_rate(0.5, 0.3))),
+        protocol.FedAvg(loss_fn=legacy._weighted_ce_sum,
+                        hp=fedavg.SGDHyperParams(
+                            lr=sgd_learning_rate(0.5, 0.3), local_steps=2)),
+    ]
+    for alg in algs:
+        assert isinstance(alg, protocol.FedAlgorithm)
+        assert alg.combine in ("sum", "mean")
+        assert alg.local_steps >= 1
+        assert hash(alg) == hash(alg)      # engine cache key requirement
+
+
+# ---------------------------------------------------------------------------
+# aggregation layer (satellite: secure bitwise + sampled unbiasedness)
+# ---------------------------------------------------------------------------
+
+def _grid_messages(key, n, scale_bits=20, frac_bits=10):
+    """Per-client message pytrees exactly on the secure fixed-point grid
+    (values k·2^-frac_bits, |k| small), shaped like an Algorithm-2 upload:
+    (scalar value, gradient pytree)."""
+    def grid(k, shape):
+        ints = jax.random.randint(k, shape, -(2 ** frac_bits),
+                                  2 ** frac_bits)
+        return ints.astype(jnp.float32) / (2.0 ** frac_bits)
+    ks = jax.random.split(key, 3)
+    val = grid(ks[0], (n,))
+    grad = {"w1": grid(ks[1], (n, 6, 4)), "w2": grid(ks[2], (n, 3))}
+    return (val, grad)
+
+
+def test_secure_bitwise_identical_to_plain_sum_alg2_messages():
+    """Mask cancellation in Z_{2^32} is exact: on grid-aligned messages
+    the secure aggregate equals the plain sum bit-for-bit — including the
+    Algorithm-2 (value, gradient) tuple the paper's §III-B requires."""
+    n = 5
+    wmsgs = _grid_messages(jax.random.key(0), n)
+    key = jax.random.key(7)
+    plain = aggregation.plain().combine_messages(wmsgs, key)
+    sec = aggregation.secure().combine_messages(wmsgs, key)
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(sec)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_secure_aggregate_independent_of_mask_key():
+    """The masks must cancel for any session/round key."""
+    wmsgs = _grid_messages(jax.random.key(1), 4)
+    s = aggregation.secure()
+    a1 = s.combine_messages(wmsgs, jax.random.key(11))
+    a2 = s.combine_messages(wmsgs, jax.random.key(12))
+    for x, y in zip(jax.tree.leaves(a1), jax.tree.leaves(a2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_secure_quantization_error_bounded():
+    """Off-grid messages: aggregate within I·2^-(scale_bits+1) per entry."""
+    n, bits = 6, 20
+    msgs = {"w": jax.random.normal(jax.random.key(2), (n, 16))}
+    plain = aggregation.plain().combine_messages(msgs, None)
+    sec = aggregation.secure(scale_bits=bits).combine_messages(
+        msgs, jax.random.key(3))
+    err = float(jnp.max(jnp.abs(plain["w"] - sec["w"])))
+    assert err <= n * 2.0 ** -(bits + 1) + 1e-9
+
+
+@pytest.mark.parametrize("combine", ["sum", "mean"])
+def test_sampled_round_weights_unbiased(combine):
+    """Σ weights behave correctly under client sampling: sum-combine round
+    weights are unbiased for the full weights (E[λ'] = λ); mean-combine
+    weights re-normalize to Σ = 1 exactly every round."""
+    n, s = 8, 3
+    weights = jnp.asarray(np.random.default_rng(0).dirichlet(np.ones(n)),
+                          jnp.float32)
+    strat = aggregation.sampled(s)
+    keys = jax.random.split(jax.random.key(0), 4096)
+    rws = jax.vmap(lambda k: strat.round_weights(weights, k, combine))(keys)
+    counts = (rws > 0).sum(1)
+    np.testing.assert_array_equal(np.asarray(counts), s)     # exactly S
+    if combine == "mean":
+        np.testing.assert_allclose(np.asarray(rws.sum(1)), 1.0, atol=1e-5)
+    else:
+        # Monte-Carlo mean of λ' ≈ λ (unbiased estimator of the full sum)
+        np.testing.assert_allclose(np.asarray(rws.mean(0)),
+                                   np.asarray(weights), rtol=0.15)
+
+
+def test_secure_and_sampled_run_all_four_algorithms(dataset, fed_partition):
+    """Every algorithm × {secure, sampled} runs and learns finitely."""
+    runs = [
+        (runtime.run_alg1, {"secure": True}),
+        (runtime.run_alg2, {"secure": True, "limit_u": 0.4}),
+        (runtime.run_fedsgd, {"aggregation": aggregation.secure(),
+                              "lr_a": 2.0}),
+        (runtime.run_fedavg, {"aggregation": aggregation.secure(),
+                              "lr_a": 2.0}),
+        (runtime.run_alg1, {"aggregation": aggregation.sampled(4)}),
+        (runtime.run_alg2, {"aggregation": aggregation.sampled(4),
+                            "limit_u": 0.4}),
+        (runtime.run_fedsgd, {"aggregation": aggregation.sampled(4),
+                              "lr_a": 2.0}),
+        (runtime.run_fedavg, {"aggregation": aggregation.sampled(4),
+                              "lr_a": 2.0}),
+    ]
+    for fn, kw in runs:
+        _, h = fn(dataset, fed_partition, batch_size=10, rounds=3,
+                  eval_every=3, eval_samples=200, **kw)
+        assert np.isfinite(h.train_cost[-1]), (fn.__name__, kw)
+
+
+def test_secure_flag_conflicts_with_explicit_aggregation(dataset,
+                                                         fed_partition):
+    """secure=True alongside an explicit aggregation= is refused, not
+    silently dropped."""
+    with pytest.raises(ValueError, match="not both"):
+        runtime.run_alg1(dataset, fed_partition, batch_size=10, rounds=2,
+                         secure=True,
+                         aggregation=aggregation.sampled(4))
+
+
+def test_secure_alg2_matches_plain_trajectory(dataset, fed_partition):
+    """Secure Algorithm 2 (the §III-B requirement the seed omitted) stays
+    on the plain trajectory up to fixed-point quantization (~1e-6/round)."""
+    _, h_p = runtime.run_alg2(dataset, fed_partition, batch_size=20,
+                              rounds=6, eval_every=3, eval_samples=500,
+                              limit_u=0.4)
+    _, h_s = runtime.run_alg2(dataset, fed_partition, batch_size=20,
+                              rounds=6, eval_every=3, eval_samples=500,
+                              limit_u=0.4, secure=True)
+    np.testing.assert_allclose(h_s.train_cost, h_p.train_cost, atol=1e-4)
+    np.testing.assert_allclose(h_s.slack, h_p.slack, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas server update (tentpole d)
+# ---------------------------------------------------------------------------
+
+def test_fused_server_update_matches_tree_path():
+    key = jax.random.key(0)
+    params = {"w1": jax.random.normal(key, (37, 5)),
+              "w2": jax.random.normal(jax.random.fold_in(key, 1), (11,))}
+    grads = jax.tree.map(lambda w: 0.3 * w + 0.01, params)
+    hp = ssca.SSCAHyperParams(tau=0.2, lam=1e-3)
+    state = ssca.init(params)
+    state = state._replace(step=jnp.asarray(4, jnp.int32))
+    p_ref, s_ref = ssca.server_update(state, params, grads, hp)
+    p_fus, s_fus = ssca.server_update(state, params, grads, hp,
+                                      fused=True, interpret=True)
+    for a, b in zip(jax.tree.leaves((p_ref, s_ref.lin, s_ref.beta)),
+                    jax.tree.leaves((p_fus, s_fus.lin, s_fus.beta))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    assert int(s_fus.step) == int(s_ref.step)
+    # λ = 0 with a live β buffer: both paths must leave β frozen
+    hp0 = ssca.SSCAHyperParams(tau=0.2, lam=0.0)
+    _, s_ref0 = ssca.server_update(state, params, grads, hp0)
+    _, s_fus0 = ssca.server_update(state, params, grads, hp0,
+                                   fused=True, interpret=True)
+    for a, b in zip(jax.tree.leaves(s_ref0.beta),
+                    jax.tree.leaves(s_fus0.beta)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_run_matches_unfused(dataset, fed_partition):
+    _, h_t = runtime.run_alg1(dataset, fed_partition, batch_size=20,
+                              rounds=4, eval_every=4, eval_samples=300)
+    _, h_f = runtime.run_alg1(dataset, fed_partition, batch_size=20,
+                              rounds=4, eval_every=4, eval_samples=300,
+                              fused=True)
+    np.testing.assert_allclose(h_f.train_cost, h_t.train_cost, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# vectorized batch scheduler (satellite)
+# ---------------------------------------------------------------------------
+
+def test_sample_schedule_seed_stable_and_paired():
+    part = partition.iid(500, 5, seed=0)
+    ids = np.asarray([1, 7, 3])
+    s1 = partition.sample_schedule(part, 8, ids, seed=9)
+    s2 = partition.sample_schedule(part, 8, ids, seed=9)
+    np.testing.assert_array_equal(s1, s2)                    # deterministic
+    # random access: the draw for round t is independent of the id list
+    lone = partition.sample_schedule(part, 8, [7], seed=9)
+    np.testing.assert_array_equal(s1[1], lone[0])
+    np.testing.assert_array_equal(
+        s1[1], partition.sample_minibatches(part, 8, 7, seed=9))
+    assert not np.array_equal(s1[0], s1[2])                  # distinct rounds
+
+
+def test_sample_schedule_within_shard_no_replacement():
+    part = partition.iid(400, 4, seed=1)
+    sched = partition.sample_schedule(part, 16, np.arange(1, 9), seed=2)
+    assert sched.shape == (8, 4, 16)
+    for t in range(8):
+        for ci in range(4):
+            row = sched[t, ci]
+            assert np.isin(row, part.indices[ci]).all()
+            assert len(np.unique(row)) == 16      # N_i ≥ B ⇒ no repeats
+
+
+def test_sample_schedule_small_client_replacement():
+    """Clients with N_i < B sample with replacement (full coverage)."""
+    idx = [np.arange(3), np.arange(3, 103)]
+    part = partition.Partition([np.asarray(i, np.int64) for i in idx],
+                               np.asarray([3, 100], np.int64))
+    sched = partition.sample_schedule(part, 10, [1], seed=0)
+    assert np.isin(sched[0, 0], idx[0]).all()
+    assert np.isin(sched[0, 1], idx[1]).all()
+    assert len(np.unique(sched[0, 1])) == 10

@@ -76,9 +76,9 @@ class TestShardingRules:
         from repro.configs import ARCH_IDS, get_config
         from repro.configs.base import reduced
         from repro.launch import sharding
+        from repro.launch.mesh import make_mesh
         from repro.models import build_model
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         for arch in ARCH_IDS:
             cfg = reduced(get_config(arch))
             model = build_model(cfg)
@@ -89,8 +89,8 @@ class TestShardingRules:
 
     def test_layer_pspec_drops_stack_axis(self):
         from repro.launch import sharding
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
         fn = sharding.layer_pspec_fn(mesh)
         spec = fn("wq", (64, 256))       # per-layer (D, H·hd)
         assert tuple(spec) == ("data", "model")
