@@ -1,0 +1,143 @@
+"""Unified engine benchmark — the per-PR performance trajectory.
+
+Measures round time for every engine configuration the repo ships:
+{plain, secure (streaming), secure-reference, sampled} × {single-device,
+client-sharded} × model size, and writes ``BENCH_engine.json`` at the
+repo root so each PR lands against a recorded perf baseline (CI runs
+``--smoke`` and uploads the file as an artifact).
+
+The secure speedup headline — streaming one-pass masking
+(:mod:`repro.kernels.secure_agg`) vs the PR-1 mask-materializing
+reference — is recorded under ``derived.secure_streaming_speedup``;
+both paths produce bit-identical aggregates, so the ratio is pure
+implementation speed.
+
+    PYTHONPATH=src python benchmarks/bench_all.py [--smoke]
+
+Sharded configs run on virtual host devices
+(``--xla_force_host_platform_device_count``), set up before jax
+initializes — run this script standalone, not from an already-running
+jax process.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (seconds, not minutes)")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="federated clients I (acceptance target: I>=8)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="devices of the sharded configs; 0 = one shard "
+                         "per client (smoke default: 2)")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="rounds per timed run (0 = 60, smoke 6)")
+    ap.add_argument("--batch-size", type=int, default=10)
+    ap.add_argument("--out", default=str(ROOT / "BENCH_engine.json"))
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    shards = args.shards or (2 if args.smoke else args.clients)
+    rounds = args.rounds or (6 if args.smoke else 60)
+    n_train = 4000 if args.smoke else 20000
+    models = [("h32", 32)] if args.smoke else [("h32", 32), ("h128", 128),
+                                               ("h512", 512)]
+
+    # the device count must be fixed before jax initializes
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count"
+                                 f"={shards}")
+    sys.path.insert(0, str(ROOT / "src"))
+    import jax
+    import numpy as np
+
+    from repro.data import partition, synthetic
+    from repro.fed import aggregation, runtime
+    from repro.launch.mesh import make_client_mesh
+
+    data = synthetic.classification_dataset(n_train=n_train,
+                                            n_test=1000, seed=0)
+    part = partition.iid(n_train, args.clients, seed=0)
+    mesh = make_client_mesh(shards)
+    aggs = [
+        ("plain", None, True),
+        ("secure", aggregation.secure(), True),
+        # the PR-1 baseline: sharding always streams, so reference is a
+        # single-device-only configuration
+        ("secure_ref", aggregation.secure(streaming=False), False),
+        ("sampled", aggregation.sampled(max(1, args.clients // 2)), True),
+    ]
+
+    def timed_run(hidden, agg, use_mesh):
+        kw = dict(batch_size=args.batch_size, rounds=rounds,
+                  eval_every=rounds, eval_samples=500, hidden=hidden,
+                  seed=0, aggregation=agg,
+                  mesh=mesh if use_mesh else None)
+        runtime.run_alg1(data, part, **kw)          # compile + stage
+        best, final = None, None
+        for _ in range(2):
+            params, h = runtime.run_alg1(data, part, **kw)
+            best = h.wall_seconds if best is None \
+                else min(best, h.wall_seconds)
+            final = float(h.train_cost[-1])
+        count = sum(int(np.prod(w.shape)) for w in jax.tree.leaves(params))
+        return best, final, count
+
+    configs = []
+    print("name,us_per_call,derived")
+    for mname, hidden in models:
+        for aname, agg, shardable in aggs:
+            for use_mesh in ([False, True] if shardable else [False]):
+                d = shards if use_mesh else 1
+                wall, final, count = timed_run(hidden, agg, use_mesh)
+                row = {"name": f"alg1/{aname}/shard{d}/{mname}",
+                       "aggregation": aname, "shards": d, "model": mname,
+                       "hidden": hidden, "param_count": count,
+                       "rounds": rounds, "wall_s": round(wall, 4),
+                       "round_ms": round(wall / rounds * 1e3, 4),
+                       "final_cost": round(final, 6)}
+                configs.append(row)
+                print(f"bench_all/{row['name']},"
+                      f"{wall / rounds * 1e6:.1f},"
+                      f"final_cost={final:.4f}")
+
+    def round_ms(name):
+        return {c["name"]: c["round_ms"] for c in configs}[name]
+
+    derived = {"secure_streaming_speedup_vs_reference": {
+        m: round(round_ms(f"alg1/secure_ref/shard1/{m}")
+                 / round_ms(f"alg1/secure/shard1/{m}"), 2)
+        for m, _ in models}}
+    derived["target"] = "secure streaming >= 2x reference at I>=8"
+    derived["sharded_round_ratio"] = {
+        m: round(round_ms(f"alg1/plain/shard{shards}/{m}")
+                 / round_ms(f"alg1/plain/shard1/{m}"), 2)
+        for m, _ in models}
+
+    out = {"schema": "bench_engine/v1",
+           "jax": jax.__version__,
+           "backend": jax.default_backend(),
+           "host_devices": jax.device_count(),
+           "smoke": bool(args.smoke),
+           "clients": args.clients, "batch_size": args.batch_size,
+           "configs": configs, "derived": derived}
+    Path(args.out).write_text(json.dumps(out, indent=1) + "\n")
+    print(f"bench_all/summary,0.0,"
+          f"secure_speedup={derived['secure_streaming_speedup_vs_reference']}"
+          f" -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,7 @@
 The CSSCA framework underlying the paper (arXiv:1801.08266) is agnostic
 to *how* the stochastic estimate Σ_i λ_i m_i is formed — it only needs
 the aggregate.  This module makes that a first-class, interchangeable
-layer.  A strategy has three parts:
+layer.  A strategy has these parts:
 
 * ``round_weights(weights, key, combine)`` — the effective per-client
   weights λ'_i for this round.  Partial participation lives here: the
@@ -18,6 +18,16 @@ layer.  A strategy has three parts:
   write/read was the engine's per-round bandwidth floor).
 * ``combine_messages(wmsgs, key)`` — reduction over explicit pre-weighted
   per-client messages (leading axis I), for strategies that do need them.
+* ``partial_combine(wmsgs, key, client_offset, num_clients)`` /
+  ``finalize_combine(partial)`` — the *sharded* decomposition of
+  ``combine_messages``: each device reduces its local client shard
+  (global ids [offset, offset + I_loc)), the partials are ``psum``-ed
+  over the client mesh axis, and ``finalize_combine`` maps the summed
+  partial to the aggregate.  For every strategy here the partial is a
+  plain pytree sum — float messages for linear strategies, *int32
+  fixed-point masked uploads* for secure aggregation, whose psum is the
+  exact Z_{2^32} wraparound sum.  ``combine_messages`` is definitionally
+  ``finalize(partial(all clients))``.
 
 All strategies work with all four algorithms — including secure
 Algorithm 2, which the paper's §III-B requires: its (value, gradient)
@@ -28,19 +38,33 @@ Secure aggregation is Bonawitz-style pairwise additive masking done in
 messages are fixed-point quantized to int32, pair masks are uniform over
 Z_{2^32} and cancel *exactly* under wraparound addition — the unmasked
 aggregate is bit-for-bit the sum of the quantized messages, with no
-floating-point mask residue (the seed's float-mask path leaked ~1e-7 per
-entry per round).  Mask generation is vectorized over all I(I−1)/2 client
-pairs via batched ``fold_in`` — replacing the unrolled O(I²) Python loop
-the seed compiled into the round.
+floating-point mask residue.  Two implementations:
+
+* ``streaming=True`` (default) — the streaming path of
+  :mod:`repro.kernels.secure_agg`: quantization, counter-based pair-mask
+  generation and the signed Z_{2^32} accumulate fused in one pass over
+  the message (Pallas kernel on TPU, masks generated in VMEM; XLA
+  elsewhere).  O(I·model) traffic, nothing pair-shaped ever touches HBM.
+* ``streaming=False`` — the reference path: all P = I(I−1)/2 pair masks
+  materialized as model-sized tensors and combined by a signed
+  tensordot.  O(P·model) traffic; kept as the numerical reference and
+  the benchmark baseline.
+
+Both return bit-identical aggregates (mod-2^32 addition is exactly
+associative/commutative), so the choice is purely a performance axis.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ops as _kops
+from repro.kernels import secure_agg as _sa
 
 PyTree = Any
 
@@ -54,14 +78,31 @@ class Aggregation(Protocol):
 
     def combine_messages(self, wmsgs: PyTree, key) -> PyTree: ...
 
+    def partial_combine(self, wmsgs: PyTree, key, client_offset,
+                        num_clients: int) -> PyTree: ...
+
+    def finalize_combine(self, partial: PyTree) -> PyTree: ...
+
 
 def _sum_clients(wmsgs: PyTree) -> PyTree:
     """Σ_i m_i over the leading client axis of every leaf."""
     return jax.tree.map(lambda m: jnp.sum(m, axis=0), wmsgs)
 
 
+class _LinearCombine:
+    """Shared sharded decomposition for strategies whose combine is a
+    plain sum: the partial is the local sum, finalize is identity."""
+
+    def partial_combine(self, wmsgs, key, client_offset, num_clients):
+        del key, client_offset, num_clients
+        return _sum_clients(wmsgs)
+
+    def finalize_combine(self, partial):
+        return partial
+
+
 @dataclasses.dataclass(frozen=True)
-class PlainAggregation:
+class PlainAggregation(_LinearCombine):
     """Full participation, plain weighted sum — the eq.-(2) server."""
 
     needs_messages = False
@@ -76,7 +117,7 @@ class PlainAggregation:
 
 
 @dataclasses.dataclass(frozen=True)
-class SampledClients:
+class SampledClients(_LinearCombine):
     """Partial participation: S of I clients per round (uniform, without
     replacement), the millions-of-users serving regime.
 
@@ -107,6 +148,20 @@ class SampledClients:
         return _sum_clients(wmsgs)
 
 
+@functools.lru_cache(maxsize=32)
+def _pair_structure(n: int):
+    """Static per-I pair layout for the reference masked path: the
+    P = n(n−1)/2 (lo, hi) index vectors and the (n, P) ±1 sign matrix.
+    Cached so repeated traces (multi-seed sweeps, sharded re-traces)
+    reuse one set of host arrays instead of rebuilding them per trace."""
+    lo, hi = np.triu_indices(n, k=1)
+    signs = np.zeros((n, len(lo)), np.int32)
+    signs[lo, np.arange(len(lo))] = 1
+    signs[hi, np.arange(len(lo))] = -1
+    return (np.asarray(lo, np.uint32), np.asarray(hi, np.uint32),
+            signs)
+
+
 @dataclasses.dataclass(frozen=True)
 class SecureAggregation:
     """Pairwise-masked aggregation in Z_{2^32} (Bonawitz et al., 2017;
@@ -120,32 +175,64 @@ class SecureAggregation:
 
     ``scale_bits`` sets the fixed-point grid 2^-scale_bits; the true
     aggregate must satisfy |Σ λ m| < 2^(31−scale_bits) per entry (2048 at
-    the default — comfortable for gradient-scale messages).
+    the default — comfortable for gradient-scale messages).  Validated at
+    construction: at least one integer bit must remain below the sign.
+
+    ``streaming`` selects the fused one-pass implementation (default;
+    Pallas kernel on TPU — see :mod:`repro.kernels.secure_agg`) versus
+    the mask-materializing reference.  Aggregates are bit-identical.
     """
     scale_bits: int = 20
 
+    streaming: bool = True
+
     needs_messages = True
+
+    def __post_init__(self):
+        b = self.scale_bits
+        if isinstance(b, bool) or not isinstance(b, (int, np.integer)) \
+                or not 1 <= int(b) <= 30:
+            raise ValueError(
+                f"scale_bits={b!r} outside [1, 30]: the int32 fixed point"
+                " needs one sign bit and at least one integer bit")
 
     def round_weights(self, weights, key, combine):
         del key  # clients apply their own (static) λ_i before masking
         return weights
 
+    # -- sharded decomposition: int32 masked partials, psum-able --------
+
+    def partial_combine(self, wmsgs, key, client_offset, num_clients):
+        return _kops.secure_quant_sum(
+            wmsgs, jax.random.key_data(key), scale_bits=self.scale_bits,
+            client_offset=client_offset, num_clients=num_clients)
+
+    def finalize_combine(self, partial):
+        return _kops.secure_dequantize(partial, self.scale_bits)
+
+    # -- single-host combine -------------------------------------------
+
     def combine_messages(self, wmsgs, key):
         n = jax.tree.leaves(wmsgs)[0].shape[0]
-        scale = jnp.float32(2.0 ** self.scale_bits)
+        if self.streaming:
+            return self.finalize_combine(
+                self.partial_combine(wmsgs, key, 0, n))
+        return self._combine_reference(wmsgs, key, n)
+
+    def _combine_reference(self, wmsgs, key, n):
+        """The PR-1 mask-materializing path: every pair mask built as a
+        full leaf-sized tensor, combined by a signed tensordot.  Kept as
+        the numerical reference and the ``bench_all`` baseline."""
         leaves, treedef = jax.tree_util.tree_flatten(jax.tree.map(
-            lambda m: jnp.round(m * scale).astype(jnp.int32), wmsgs))
+            lambda m: _sa.quantize(m, self.scale_bits), wmsgs))
 
         if n > 1:
-            lo, hi = np.triu_indices(n, k=1)                 # P pairs
-            signs = np.zeros((n, len(lo)), np.int32)         # +1 lo, −1 hi
-            signs[lo, np.arange(len(lo))] = 1
-            signs[hi, np.arange(len(lo))] = -1
+            lo, hi, signs = _pair_structure(n)
             signs = jnp.asarray(signs)
             pair_keys = jax.vmap(
                 lambda a, b: jax.random.fold_in(jax.random.fold_in(key, a),
                                                 b)
-            )(jnp.asarray(lo, jnp.uint32), jnp.asarray(hi, jnp.uint32))
+            )(jnp.asarray(lo), jnp.asarray(hi))
             leaf_keys = jax.vmap(
                 lambda k: jax.random.split(k, len(leaves)))(pair_keys)
 
@@ -164,7 +251,7 @@ class SecureAggregation:
         else:
             agg_q = [jnp.sum(q, axis=0) for q in leaves]
 
-        agg = [a.astype(jnp.float32) / scale for a in agg_q]
+        agg = [_sa.dequantize(a, self.scale_bits) for a in agg_q]
         return jax.tree_util.tree_unflatten(treedef, agg)
 
 
@@ -172,8 +259,8 @@ def plain() -> PlainAggregation:
     return PlainAggregation()
 
 
-def secure(scale_bits: int = 20) -> SecureAggregation:
-    return SecureAggregation(scale_bits=scale_bits)
+def secure(scale_bits: int = 20, streaming: bool = True) -> SecureAggregation:
+    return SecureAggregation(scale_bits=scale_bits, streaming=streaming)
 
 
 def sampled(num_sampled: int) -> SampledClients:

@@ -13,7 +13,18 @@ loop:
 2. the training arrays live on device; per-round batches are device-side
    gathers inside the scan body;
 3. rounds between eval points run as one ``lax.scan`` — one XLA dispatch
-   per eval interval instead of per round.
+   per eval interval instead of per round;
+4. params, state and the round schedule chunk are **donated** to the
+   chunk executable (``donate_argnums``), so the scan updates the model
+   in place instead of doubling HBM residency per chunk;
+5. with ``mesh=`` (a 1-D client mesh from
+   :func:`repro.launch.mesh.make_client_mesh`) the round body runs under
+   ``shard_map`` over the client axis: each device owns I/D clients,
+   computes their uploads locally, and the server aggregate is one
+   ``psum`` — secure aggregation psums *int32 masked fixed-point
+   partials*, so the sharded aggregate is bit-identical to the
+   single-device one.  ``mesh=None`` (default) is the single-device
+   fallback.
 
 Per round the body is:  gather (I, [E,] B) client batches → vmap
 ``client_upload`` over clients → aggregate (plain / secure / sampled) →
@@ -27,6 +38,7 @@ import collections
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -36,6 +48,7 @@ import numpy as np
 from repro.core.protocol import FedAlgorithm
 from repro.data.partition import Partition, sample_schedule
 from repro.fed.aggregation import Aggregation, PlainAggregation
+from repro.launch import mesh as mesh_mod
 from repro.mlpapp import model as mlp
 
 PyTree = Any
@@ -56,22 +69,29 @@ class History:
         return dataclasses.asdict(self)
 
 
+# Module-level jit: one compiled probe per argument shape, shared by every
+# evaluator instance — per-run closures used to re-jit (and so re-compile)
+# the identical computation on every run of a multi-seed benchmark sweep.
+@jax.jit
+def _measure(params, x_tr, y_tr, x_te, y_te):
+    return (mlp.cross_entropy(params, (x_tr, y_tr)),
+            mlp.accuracy(params, x_te, y_te),
+            mlp.sparsity(params))
+
+
 def evaluator(data, eval_samples: int, seed: int = 123):
-    """Jitted (cost, accuracy, sparsity) probe on a fixed eval subset."""
+    """(cost, accuracy, sparsity) probe on a fixed eval subset.
+
+    Eval data is passed as jit arguments to the module-level
+    :func:`_measure` (a closure would embed it as HLO constants and
+    trigger multi-second constant folding per compile — and a per-run jit
+    wrapper would recompile per run)."""
     rng = np.random.default_rng(seed)
     tr = rng.choice(len(data.x_train), size=min(eval_samples,
                                                 len(data.x_train)),
                     replace=False)
     xe_tr = jnp.asarray(data.x_train[tr]); ye_tr = jnp.asarray(data.y_train[tr])
     xe_te = jnp.asarray(data.x_test); ye_te = jnp.asarray(data.y_test)
-
-    # eval data passed as jit arguments (a closure would embed them as HLO
-    # constants and trigger multi-second constant folding per compile)
-    @jax.jit
-    def _measure(params, x_tr, y_tr, x_te, y_te):
-        return (mlp.cross_entropy(params, (x_tr, y_tr)),
-                mlp.accuracy(params, x_te, y_te),
-                mlp.sparsity(params))
 
     def measure(params):
         return _measure(params, xe_tr, ye_tr, xe_te, ye_te)
@@ -137,14 +157,18 @@ def build_schedule(part: Partition, batch_size: int, rounds: int,
 
 
 @functools.lru_cache(maxsize=64)
-def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation):
+def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
+              mesh=None):
     """The jitted scan-over-rounds body, cached per (algorithm,
-    aggregation) pair.
+    aggregation, mesh) triple.
 
-    Both are hashable frozen dataclasses and the data arrays are passed
-    as arguments (not closed over), so repeated ``run`` calls — the
-    multi-seed benchmark loops — reuse one compiled executable instead of
-    re-tracing a fresh closure per run.
+    All three are hashable (frozen dataclasses / ``jax.sharding.Mesh``)
+    and the data arrays are passed as arguments (not closed over), so
+    repeated ``run`` calls — the multi-seed benchmark loops — reuse one
+    compiled executable instead of re-tracing a fresh closure per run.
+    ``params``, ``state`` and the round-schedule chunk are donated: the
+    scan's carry update happens in place instead of holding both the old
+    and new model/state per chunk.
 
     Three statically-selected round bodies:
 
@@ -158,61 +182,112 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation):
       per-sample weights, then combined by the strategy (masking).
     * mean-combine (FedAvg) — per-client models under vmap, weighted by
       λ'_i at the message level, then combined.
+
+    Under a client mesh the same three bodies run per client *shard*
+    (``shard_map`` over the mesh's first axis): round weights are
+    computed identically on every device from the replicated full
+    ``weights`` and sliced to the local clients, uploads stay local, and
+    the aggregate is one ``psum`` — of the super-batch statistic (linear
+    strategies) or of the strategy's partial combine (secure: int32
+    masked fixed-point uploads, whose wraparound psum reproduces the
+    single-device Z_{2^32} aggregate bit-for-bit).
     """
     combine = algorithm.combine
 
-    @jax.jit
-    def run_chunk(params, state, x_train, y_train, weights, session_key,
-                  idx_chunk, ts):
+    def chunk(params, state, x_train, y_train, weights, key_data,
+              idx_chunk, ts, shard=None):
+        session_key = jax.random.wrap_key_data(key_data)
+        num_clients = weights.shape[0]
+
         def one_round(carry, xs):
             params, state = carry
             idx_t, t = xs
             key_t = jax.random.fold_in(session_key, t)
             rw = aggregation.round_weights(weights, key_t, combine)
+            if shard is not None:
+                axis = shard
+                i_loc = idx_t.shape[0]
+                offset = jax.lax.axis_index(axis) * i_loc
+                rw = jax.lax.dynamic_slice(rw, (offset,), (i_loc,))
             if combine == "sum" and not aggregation.needs_messages:
                 flat = idx_t.reshape(-1)                     # (I·B,)
                 n_per = idx_t.shape[-1]
                 batch = (x_train[flat], y_train[flat],
                          jnp.repeat(rw, n_per))
                 agg = algorithm.client_upload(params, state, batch)
-            elif combine == "sum":
+                if shard is not None:
+                    agg = jax.lax.psum(agg, axis)
+                return algorithm.server_step(params, state, agg), None
+            if combine == "sum":
                 xb, yb = x_train[idx_t], y_train[idx_t]      # (I, B, ·)
                 ws = jnp.broadcast_to(rw[:, None], idx_t.shape)
                 msgs = jax.vmap(algorithm.client_upload,
                                 in_axes=(None, None, 0))(params, state,
                                                          (xb, yb, ws))
-                agg = aggregation.combine_messages(msgs, key_t)
             else:                                            # mean: models
                 batch = (x_train[idx_t], y_train[idx_t])     # (I, E, B, ·)
-                msgs = jax.vmap(algorithm.client_upload,
-                                in_axes=(None, None, 0))(params, state,
-                                                         batch)
-                wmsgs = jax.tree.map(
+                raw = jax.vmap(algorithm.client_upload,
+                               in_axes=(None, None, 0))(params, state,
+                                                        batch)
+                msgs = jax.tree.map(
                     lambda m: m * rw.reshape((-1,) + (1,) * (m.ndim - 1)),
-                    msgs)
-                agg = aggregation.combine_messages(wmsgs, key_t)
+                    raw)
+            if shard is None:
+                agg = aggregation.combine_messages(msgs, key_t)
+            else:
+                partial = aggregation.partial_combine(
+                    msgs, key_t, offset, num_clients)
+                agg = aggregation.finalize_combine(
+                    jax.lax.psum(partial, axis))
             return algorithm.server_step(params, state, agg), None
 
         (params, state), _ = jax.lax.scan(one_round, (params, state),
                                           (idx_chunk, ts))
         return params, state
 
-    return run_chunk
+    if mesh is None:
+        return jax.jit(chunk, donate_argnums=(0, 1, 6))
+
+    axis = mesh.axis_names[0]
+    spec = jax.sharding.PartitionSpec
+
+    def sharded_body(params, state, x_train, y_train, weights, key_data,
+                     idx_chunk, ts):
+        return chunk(params, state, x_train, y_train, weights, key_data,
+                     idx_chunk, ts, shard=axis)
+
+    fn = mesh_mod.shard_map_fn(
+        sharded_body, mesh,
+        in_specs=(spec(), spec(), spec(), spec(), spec(), spec(),
+                  spec(None, axis), spec()),
+        out_specs=(spec(), spec()))
+    return jax.jit(fn, donate_argnums=(0, 1, 6))
 
 
 def run(algorithm: FedAlgorithm, data, part: Partition, *,
         batch_size: int, rounds: int, params: PyTree, seed: int = 0,
         eval_every: int = 1, eval_samples: int = 10000,
-        aggregation: Optional[Aggregation] = None
-        ) -> tuple[PyTree, History]:
+        aggregation: Optional[Aggregation] = None,
+        mesh=None) -> tuple[PyTree, History]:
     """Run ``algorithm`` for ``rounds`` rounds under ``aggregation``.
 
     Returns the final parameters and the :class:`History` (same schema as
     the seed drivers).  ``seed`` controls both the mini-batch schedule and
     the per-round aggregation key (client sampling / mask derivation).
+
+    ``mesh`` — a 1-D client mesh (:func:`repro.launch.mesh.make_client_mesh`)
+    shards each round's clients over the mesh devices with psum
+    aggregation; the device count must divide the number of clients.
+    ``None`` runs single-device.
     """
     aggregation = aggregation if aggregation is not None \
         else PlainAggregation()
+    if mesh is not None:
+        ndev = mesh.shape[mesh.axis_names[0]]
+        if part.num_clients % ndev:
+            raise ValueError(
+                f"client mesh of {ndev} devices does not divide "
+                f"I={part.num_clients} clients")
     schedule = build_schedule(part, batch_size, rounds,
                               algorithm.local_steps, seed,
                               e_axis=algorithm.combine == "mean")
@@ -221,9 +296,12 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *,
     y_train = _staged(data.y_train)
     weights = jnp.asarray(algorithm.client_weights(part, batch_size),
                           jnp.float32)
-    session_key = jax.random.key(seed + 10_000)
-    run_chunk = _chunk_fn(algorithm, aggregation)
+    key_data = jax.random.key_data(jax.random.key(seed + 10_000))
+    run_chunk = _chunk_fn(algorithm, aggregation, mesh)
 
+    # chunk inputs are donated — never hand the caller's param buffers to
+    # the donating executable (the caller may reuse them across runs)
+    params = jax.tree.map(jnp.array, params)
     state = algorithm.init_state(params)
     measure = evaluator(data, eval_samples)
     hist = History(uplink_floats_per_round=algorithm.uplink_floats(params))
@@ -232,9 +310,18 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *,
     while done < rounds:
         n = min(eval_every, rounds - done)
         ts = jnp.arange(done + 1, done + n + 1, dtype=jnp.int32)
-        params, state = run_chunk(params, state, x_train, y_train,
-                                  weights, session_key,
-                                  idx_dev[done:done + n], ts)
+        with warnings.catch_warnings():
+            # the donated int32 schedule chunk has no same-shaped output
+            # to alias into (params/state do), so XLA notes it unusable
+            # on every compile; the filter is pinned to int32 arrays so a
+            # real params/state (float) donation failure still surfaces
+            warnings.filterwarnings(
+                "ignore",
+                message=r"Some donated buffers were not usable: "
+                        r"ShapedArray\(int32")
+            params, state = run_chunk(params, state, x_train, y_train,
+                                      weights, key_data,
+                                      idx_dev[done:done + n], ts)
         done += n
         metrics = algorithm.round_metrics(state)
         record(hist, done, measure, params,

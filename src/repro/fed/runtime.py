@@ -75,8 +75,8 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
              hidden: int = 128, eval_every: int = 1,
              eval_samples: int = 10000, secure: bool = False,
              fused: bool = False,
-             aggregation: Optional[agg_mod.Aggregation] = None
-             ) -> tuple[mlp.MLPParams, History]:
+             aggregation: Optional[agg_mod.Aggregation] = None,
+             mesh=None) -> tuple[mlp.MLPParams, History]:
     """Algorithm 1 on the eq.-(11) objective F(ω) + λ‖ω‖².
 
     ``secure=True`` is shorthand for ``aggregation=aggregation.secure()``
@@ -92,7 +92,8 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
     aggregation = _resolve_aggregation(aggregation, secure)
     return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
                       params=params, seed=seed, eval_every=eval_every,
-                      eval_samples=eval_samples, aggregation=aggregation)
+                      eval_samples=eval_samples, aggregation=aggregation,
+                      mesh=mesh)
 
 
 def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
@@ -100,8 +101,8 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
              seed: int = 0, params: Optional[mlp.MLPParams] = None,
              hidden: int = 128, eval_every: int = 1,
              eval_samples: int = 10000, secure: bool = False,
-             aggregation: Optional[agg_mod.Aggregation] = None
-             ) -> tuple[mlp.MLPParams, History]:
+             aggregation: Optional[agg_mod.Aggregation] = None,
+             mesh=None) -> tuple[mlp.MLPParams, History]:
     """Algorithm 2 on eq. (18): min ‖ω‖² s.t. F(ω) ≤ U.
 
     ``secure=True`` masks the (value, gradient) upload q1 — the secure
@@ -115,7 +116,8 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
     aggregation = _resolve_aggregation(aggregation, secure)
     return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
                       params=params, seed=seed, eval_every=eval_every,
-                      eval_samples=eval_samples, aggregation=aggregation)
+                      eval_samples=eval_samples, aggregation=aggregation,
+                      mesh=mesh)
 
 
 def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
@@ -123,15 +125,16 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
                seed: int = 0, params: Optional[mlp.MLPParams] = None,
                hidden: int = 128, eval_every: int = 1,
                eval_samples: int = 10000,
-               aggregation: Optional[agg_mod.Aggregation] = None
-               ) -> tuple[mlp.MLPParams, History]:
+               aggregation: Optional[agg_mod.Aggregation] = None,
+               mesh=None) -> tuple[mlp.MLPParams, History]:
     """E = 1 SGD baseline [3],[4] on the same objective as Algorithm 1."""
     params = _init(data, seed, hidden, params)
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha))
     alg = protocol.FedSGD(loss_fn=_weighted_ce_sum, hp=hp, lam=lam)
     return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
                       params=params, seed=seed, eval_every=eval_every,
-                      eval_samples=eval_samples, aggregation=aggregation)
+                      eval_samples=eval_samples, aggregation=aggregation,
+                      mesh=mesh)
 
 
 def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
@@ -139,8 +142,8 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
                lr_alpha: float = 0.3, seed: int = 0,
                params: Optional[mlp.MLPParams] = None, hidden: int = 128,
                eval_every: int = 1, eval_samples: int = 10000,
-               aggregation: Optional[agg_mod.Aggregation] = None
-               ) -> tuple[mlp.MLPParams, History]:
+               aggregation: Optional[agg_mod.Aggregation] = None,
+               mesh=None) -> tuple[mlp.MLPParams, History]:
     """FedAvg [3] / PR-SGD [5]: E local steps per round, then model average.
 
     Per-client batches are (I, E, B) samples; aggregation weight N_i/N.
@@ -151,4 +154,5 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
     alg = protocol.FedAvg(loss_fn=_fedavg_local_loss(lam), hp=hp)
     return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
                       params=params, seed=seed, eval_every=eval_every,
-                      eval_samples=eval_samples, aggregation=aggregation)
+                      eval_samples=eval_samples, aggregation=aggregation,
+                      mesh=mesh)

@@ -2,6 +2,8 @@
 validation against pure-jnp oracles (ref.py):
 
 * ``ssca_update``     — fused Algorithm-1 server round (the paper's hot path)
+* ``secure_agg``      — streaming secure aggregation: quantize + counter-mode
+                        pair masks + Z_{2^32} accumulate in one pass
 * ``flash_attention`` — blocked causal GQA attention
 * ``rwkv6_wkv``       — chunked RWKV-6 WKV scan (TPU port of the CUDA kernel)
 """

@@ -8,13 +8,15 @@ TPU the same calls compile to Mosaic.
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rwkv6_scan as _rw
+from repro.kernels import secure_agg as _sa
 from repro.kernels import ssca_update as _su
 
 PyTree = Any
@@ -72,6 +74,69 @@ def ssca_update(params: PyTree, lin: PyTree, grads: PyTree, beta: PyTree,
         return jax.tree_util.tree_unflatten(treedef, out)
 
     return unflat(w2), unflat(l2), unflat(b2)
+
+
+def secure_quant_sum(wmsgs: PyTree, key_data, *, scale_bits: int,
+                     client_offset=0, num_clients: Optional[int] = None,
+                     interpret: bool = False,
+                     use_kernel: Optional[bool] = None) -> PyTree:
+    """Streaming masked quantized aggregate over a message pytree.
+
+    Every leaf carries a leading client axis (I_loc, ...).  Flattens the
+    tree into one (I_loc, n) message matrix, runs the streaming secure
+    aggregation (:mod:`repro.kernels.secure_agg` — quantize + counter-
+    based pair masks + Z_{2^32} accumulate in one pass), and unflattens
+    the (n,) int32 aggregate back to per-leaf shape.  Masks are never
+    materialized at model size.
+
+    ``client_offset``/``num_clients`` give the shard's global client ids
+    ([offset, offset + I_loc) of num_clients) for the sharded engine —
+    psum the returned int32 pytree over the client axis, then
+    :func:`secure_dequantize`.  ``use_kernel=None`` auto-selects the
+    Pallas kernel on TPU and the XLA streaming path elsewhere (the
+    kernel is also used under ``interpret=True`` for CPU validation).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(wmsgs)
+    i_loc = leaves[0].shape[0]
+    shapes = [x.shape[1:] for x in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    nc = i_loc if num_clients is None else int(num_clients)
+    # 2-word PRF key from whatever key_data the PRNG impl yields (threefry
+    # keys are (2,), rbg/unsafe_rbg are (4,) — take the first/last words)
+    kd = jnp.asarray(key_data, jnp.uint32).reshape(-1)
+    key_data = jnp.stack([kd[0], kd[-1]])
+    flat = jnp.concatenate(
+        [x.astype(jnp.float32).reshape(i_loc, -1) for x in leaves], axis=1)
+    n = flat.shape[1]
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel or interpret:
+        pad = (-n) % _sa.LANES
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        scalars = jnp.concatenate(
+            [key_data,
+             jnp.asarray(client_offset).astype(jnp.uint32).reshape(1)])
+        agg = _sa.masked_sum_2d(
+            flat.reshape(i_loc, -1, _sa.LANES), scalars,
+            scale_bits=scale_bits, num_clients=nc,
+            interpret=interpret).reshape(-1)[:n]
+    elif isinstance(client_offset, int) and client_offset == 0 \
+            and i_loc == nc:
+        agg = _sa.masked_sum_flat(flat, key_data, scale_bits)
+    else:
+        agg = _sa.masked_partial_sum_flat(flat, key_data, scale_bits,
+                                          client_offset, nc)
+    out, off = [], 0
+    for size, shape in zip(sizes, shapes):
+        out.append(agg[off:off + size].reshape(shape))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def secure_dequantize(agg_q: PyTree, scale_bits: int) -> PyTree:
+    """int32 fixed-point aggregate pytree → f32 (grid 2^-scale_bits)."""
+    return jax.tree.map(lambda q: _sa.dequantize(q, scale_bits), agg_q)
 
 
 def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128,

@@ -40,6 +40,37 @@ def use_mesh(mesh):
     return mesh
 
 
+def shard_map_fn(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions: the top-level API (jax ≥ 0.6)
+    takes ``check_vma`` and can infer the mesh from context; the 0.4.x
+    experimental API needs the mesh positionally and ``check_rep``.
+    ``mesh=None`` infers from the ambient context (``jax.set_mesh`` on
+    new jax, the physical mesh of the ``with mesh:`` block on old)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if mesh is None else {"mesh": mesh}
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False, **kw)
+    from jax.experimental import shard_map as _sm
+    if mesh is None:
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+    return _sm.shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_rep=False)
+
+
+def make_client_mesh(num_shards: int = 0):
+    """1-D mesh over the federated-client axis for the sharded engine.
+
+    Each of the ``num_shards`` devices owns I / num_shards clients of the
+    round: uploads are computed shard-locally and the server aggregate is
+    one psum over ``clients`` (the paper's Σ_i, lowered hierarchically by
+    XLA exactly like the (`pod`,`data`) reduction of the production
+    mesh).  ``num_shards=0`` uses every local device.
+    """
+    n = num_shards or jax.local_device_count()
+    return make_mesh((n,), ("clients",))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

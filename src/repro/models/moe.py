@@ -112,17 +112,10 @@ def moe_ffn(x, params, *, num_experts: int, k: int,
 # contributions from all expert owners — the MoE combine collective.
 
 def _shard_map(f, in_specs, out_specs):
-    """``jax.shard_map`` across jax versions: the top-level API (jax ≥ 0.6)
-    infers the mesh from context and takes ``check_vma``; the 0.4.x
-    experimental API needs the ambient physical mesh and ``check_rep``."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
-                             check_vma=False)
-    from jax.experimental import shard_map as _sm
-    from jax.interpreters import pxla
-    mesh = pxla.thread_resources.env.physical_mesh
-    return _sm.shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_rep=False)
+    """Ambient-mesh ``shard_map`` via the version-compat helper in
+    :mod:`repro.launch.mesh` (shared with the sharded federated engine)."""
+    from repro.launch.mesh import shard_map_fn
+    return shard_map_fn(f, None, in_specs, out_specs)
 
 
 def _slots_for_experts(idx_e, gates_e, e_lo, e_loc: int, cap: int, k: int):

@@ -1,0 +1,68 @@
+"""Subprocess body for test_sharded_engine: the shard_map client-sharded
+engine reproduces the single-device trajectories on a 2-virtual-device
+CPU mesh (the 2-device override must be set before jax initializes, so
+this runs outside the main test process).
+
+Run directly:  python tests/sharded_engine_check.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=2")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.data import partition, synthetic
+from repro.fed import aggregation, runtime
+from repro.launch.mesh import make_client_mesh
+
+
+def main():
+    data = synthetic.classification_dataset(n_train=2000, n_test=500,
+                                            seed=0)
+    part = partition.iid(2000, 10, seed=0)
+    mesh = make_client_mesh(2)
+    kw = dict(batch_size=10, rounds=6, eval_every=3, eval_samples=300,
+              seed=3)
+
+    cases = [
+        ("alg1/plain", runtime.run_alg1, {}),
+        ("alg1/secure", runtime.run_alg1, {"secure": True}),
+        ("alg1/sampled", runtime.run_alg1,
+         {"aggregation": aggregation.sampled(4)}),
+        ("fedavg", runtime.run_fedavg, {"local_steps": 2, "lr_a": 2.0}),
+    ]
+    for name, fn, extra in cases:
+        _, h1 = fn(data, part, **kw, **extra)
+        _, h2 = fn(data, part, mesh=mesh, **kw, **extra)
+        assert h1.rounds == h2.rounds, name
+        gap = float(np.max(np.abs(np.asarray(h1.train_cost)
+                                  - np.asarray(h2.train_cost))))
+        acc_gap = float(np.max(np.abs(np.asarray(h1.test_accuracy)
+                                      - np.asarray(h2.test_accuracy))))
+        print(f"{name:14s} traj gap {gap:.2e}  acc gap {acc_gap:.2e}")
+        # psum reassociation only (secure is bit-exact in the aggregate)
+        assert gap < 5e-5, (name, gap)
+        assert acc_gap < 2e-3, (name, acc_gap)
+
+    # a mesh that does not divide I is refused, not silently truncated
+    part7 = partition.iid(700, 7, seed=0)
+    try:
+        runtime.run_alg1(data, part7, batch_size=5, rounds=1,
+                         mesh=mesh)
+    except ValueError as e:
+        assert "divide" in str(e)
+    else:
+        raise AssertionError("expected ValueError for I=7 on 2 devices")
+
+    print("SHARDED_ENGINE_CHECK_OK")
+
+
+if __name__ == "__main__":
+    main()

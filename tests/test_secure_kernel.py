@@ -1,0 +1,168 @@
+"""Streaming secure-aggregation kernel: bit-exactness and edge cases.
+
+Every implementation — the Pallas kernel (interpret mode on CPU), the
+XLA streaming paths (pairwise full-view and directed shard-local), and
+the PR-1 mask-materializing reference — must return the *bit-identical*
+aggregate: addition mod 2^32 is exactly associative/commutative, so mask
+cancellation leaves precisely Σ_i quant(m_i) regardless of formulation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fed import aggregation
+from repro.kernels import ops, secure_agg
+
+
+def _alg2_messages(key, n):
+    """(value, gradient) pytree shaped like a secure Algorithm-2 upload,
+    with deliberately awkward leaf sizes (odd, prime, scalar-per-client)
+    so the flatten+pad path is exercised."""
+    ks = jax.random.split(key, 4)
+    return (jax.random.normal(ks[0], (n,)),                  # scalar leaf
+            {"w1": jax.random.normal(ks[1], (n, 7, 13)),     # 91: odd
+             "w2": jax.random.normal(ks[2], (n, 3)),
+             "w3": jax.random.normal(ks[3], (n, 257))})      # prime > 128
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 8])
+def test_kernel_bit_exact_vs_reference(n):
+    """Pallas kernel (interpret), XLA streaming, and the reference
+    mask-materializing path agree bit-for-bit — including I=1 (no pairs)
+    and the odd-leaf padding cases."""
+    msgs = _alg2_messages(jax.random.key(0), n)
+    key = jax.random.key(11)
+    ref = aggregation.secure(streaming=False).combine_messages(msgs, key)
+    stream = aggregation.secure().combine_messages(msgs, key)
+    kd = jax.random.key_data(key)
+    krn = ops.secure_dequantize(
+        ops.secure_quant_sum(msgs, kd, scale_bits=20, interpret=True), 20)
+    _assert_tree_equal(ref, stream)
+    _assert_tree_equal(ref, krn)
+
+
+def test_kernel_bit_exact_vs_xla_partials_across_shards():
+    """Shard-local partial sums (kernel and XLA directed paths) combine
+    by plain int32 addition to the full-view aggregate bit-for-bit —
+    cross-shard pair masks are regenerated identically on both endpoint
+    devices (counter-mode streams) and cancel in the combine."""
+    n, split = 6, 4
+    msgs = _alg2_messages(jax.random.key(2), n)
+    kd = jax.random.key_data(jax.random.key(3))
+    full = ops.secure_quant_sum(msgs, kd, scale_bits=20, use_kernel=False)
+    lo = jax.tree.map(lambda m: m[:split], msgs)
+    hi = jax.tree.map(lambda m: m[split:], msgs)
+    for interpret in (False, True):
+        p0 = ops.secure_quant_sum(lo, kd, scale_bits=20, client_offset=0,
+                                  num_clients=n, use_kernel=False,
+                                  interpret=interpret)
+        p1 = ops.secure_quant_sum(hi, kd, scale_bits=20, client_offset=split,
+                                  num_clients=n, use_kernel=False,
+                                  interpret=interpret)
+        _assert_tree_equal(full, jax.tree.map(lambda a, b: a + b, p0, p1))
+
+
+def test_large_client_count_scan_path_bit_exact():
+    """Above UNROLL_MAX_CLIENTS the XLA paths switch from unrolled mask
+    streams (HLO grows as I²) to a lax.scan over clients; aggregates and
+    cross-shard partial combines stay bit-exact."""
+    n = secure_agg.UNROLL_MAX_CLIENTS + 4
+    msgs = {"w": jax.random.normal(jax.random.key(9), (n, 33))}
+    key = jax.random.key(10)
+    ref = aggregation.secure(streaming=False).combine_messages(msgs, key)
+    stream = aggregation.secure().combine_messages(msgs, key)
+    _assert_tree_equal(ref, stream)
+    kd = jax.random.key_data(key)
+    half = n // 2
+    p0 = ops.secure_quant_sum(jax.tree.map(lambda m: m[:half], msgs), kd,
+                              scale_bits=20, client_offset=0,
+                              num_clients=n, use_kernel=False)
+    p1 = ops.secure_quant_sum(jax.tree.map(lambda m: m[half:], msgs), kd,
+                              scale_bits=20, client_offset=half,
+                              num_clients=n, use_kernel=False)
+    comb = ops.secure_dequantize(
+        jax.tree.map(lambda a, b: a + b, p0, p1), 20)
+    _assert_tree_equal(ref, comb)
+
+
+def test_four_word_key_data_accepted():
+    """PRNG impls with 4-word keys (rbg/unsafe_rbg) must work: the PRF
+    takes its two words from the first/last key words."""
+    msgs = {"w": jax.random.normal(jax.random.key(1), (3, 17))}
+    kd4 = jnp.asarray([7, 11, 13, 17], jnp.uint32)
+    out = ops.secure_quant_sum(msgs, kd4, scale_bits=20, use_kernel=False)
+    want = jnp.sum(secure_agg.quantize(msgs["w"], 20), axis=0)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(out["w"]))
+
+
+def test_aggregate_is_plain_quantized_sum():
+    """The unmasked aggregate equals Σ_i quant(m_i) exactly (the
+    quantization error bound of the secure tests is inherited)."""
+    n = 5
+    msgs = {"w": jax.random.normal(jax.random.key(4), (n, 33))}
+    kd = jax.random.key_data(jax.random.key(5))
+    want = jnp.sum(secure_agg.quantize(msgs["w"], 20), axis=0)
+    got = ops.secure_quant_sum(msgs, kd, scale_bits=20, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got["w"]))
+
+
+def test_partial_view_hides_individual_message():
+    """A single client's masked partial is one-time-padded: statistically
+    far from its raw quantized message, and re-keyed across rounds."""
+    n = 4
+    msgs = {"w": jax.random.normal(jax.random.key(6), (n, 64)) * 0.1}
+    one = jax.tree.map(lambda m: m[:1], msgs)
+    kd1 = jax.random.key_data(jax.random.key(7))
+    kd2 = jax.random.key_data(jax.random.key(8))
+    raw = secure_agg.quantize(msgs["w"][0], 20)
+    m1 = ops.secure_quant_sum(one, kd1, scale_bits=20, client_offset=0,
+                              num_clients=n, use_kernel=False)["w"]
+    m2 = ops.secure_quant_sum(one, kd2, scale_bits=20, client_offset=0,
+                              num_clients=n, use_kernel=False)["w"]
+    far = np.abs(np.asarray(m1, np.int64) - np.asarray(raw, np.int64))
+    assert np.median(far) > 2 ** 24                  # mask ≫ message scale
+    assert np.abs(np.asarray(m1, np.int64)
+                  - np.asarray(m2, np.int64)).min() > 0   # fresh per round
+
+
+def test_mask_streams_look_uniform():
+    """Counter-mode mask words: mean bit balance within 1% of 1/2 over a
+    64k-word stream (a smoke check on the PRF, not a statistical suite)."""
+    counters = jnp.arange(1 << 16, dtype=jnp.uint32)
+    seed = secure_agg.pair_seed(jnp.uint32(123), jnp.uint32(456),
+                                jnp.uint32(2), jnp.uint32(7))
+    bits = np.asarray(secure_agg.mask_bits(seed, counters))
+    ones = np.unpackbits(bits.view(np.uint8)).mean()
+    assert abs(ones - 0.5) < 0.01
+
+
+def test_scale_bits_validated_at_construction():
+    for bad in (0, 31, -3, 20.0, True):
+        with pytest.raises(ValueError, match="scale_bits"):
+            aggregation.SecureAggregation(scale_bits=bad)
+    assert aggregation.secure(scale_bits=12).scale_bits == 12
+    # numpy integers (config files, bench rows) are valid
+    assert aggregation.SecureAggregation(
+        scale_bits=np.int64(16)).scale_bits == 16
+
+
+def test_secure_run_streaming_matches_reference_trajectory(dataset,
+                                                           fed_partition):
+    """End-to-end engine parity: the streaming secure path drives the
+    identical trajectory as the reference path (aggregates bit-equal ⇒
+    identical server math)."""
+    from repro.fed import runtime
+    kw = dict(batch_size=10, rounds=4, eval_every=2, eval_samples=300,
+              seed=5)
+    _, h_ref = runtime.run_alg1(dataset, fed_partition,
+                                aggregation=aggregation.secure(
+                                    streaming=False), **kw)
+    _, h_str = runtime.run_alg1(dataset, fed_partition,
+                                aggregation=aggregation.secure(), **kw)
+    np.testing.assert_array_equal(h_ref.train_cost, h_str.train_cost)
