@@ -12,6 +12,14 @@ reference — is recorded under ``derived.secure_streaming_speedup``;
 both paths produce bit-identical aggregates, so the ratio is pure
 implementation speed.
 
+Schema v2 adds the **communication ledger**: every config row carries
+``uplink_bytes_per_round`` (exact wire bytes, dtype/sparsity/mask-
+overhead aware), and the ``comm_curves`` section records
+accuracy-vs-cumulative-uplink-bytes for {dense, 8-bit quantized,
+top-k 10% + 8-bit} × {plain, secure} uploads — the paper's
+communication-cost comparison, with
+``derived.uplink_reduction_vs_dense`` as the headline ratios.
+
     PYTHONPATH=src python benchmarks/bench_all.py [--smoke]
 
 Sharded configs run on virtual host devices
@@ -25,7 +33,6 @@ import argparse
 import json
 import os
 import sys
-import time
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
@@ -64,7 +71,7 @@ def main(argv=None):
     import numpy as np
 
     from repro.data import partition, synthetic
-    from repro.fed import aggregation, runtime
+    from repro.fed import aggregation, compression, runtime
     from repro.launch.mesh import make_client_mesh
 
     data = synthetic.classification_dataset(n_train=n_train,
@@ -80,20 +87,20 @@ def main(argv=None):
         ("sampled", aggregation.sampled(max(1, args.clients // 2)), True),
     ]
 
-    def timed_run(hidden, agg, use_mesh):
+    def timed_run(hidden, agg, use_mesh, compressor=None):
         kw = dict(batch_size=args.batch_size, rounds=rounds,
                   eval_every=rounds, eval_samples=500, hidden=hidden,
-                  seed=0, aggregation=agg,
+                  seed=0, aggregation=agg, compressor=compressor,
                   mesh=mesh if use_mesh else None)
         runtime.run_alg1(data, part, **kw)          # compile + stage
-        best, final = None, None
+        best, hist = None, None
         for _ in range(2):
             params, h = runtime.run_alg1(data, part, **kw)
             best = h.wall_seconds if best is None \
                 else min(best, h.wall_seconds)
-            final = float(h.train_cost[-1])
+            hist = h
         count = sum(int(np.prod(w.shape)) for w in jax.tree.leaves(params))
-        return best, final, count
+        return best, hist, count
 
     configs = []
     print("name,us_per_call,derived")
@@ -101,17 +108,48 @@ def main(argv=None):
         for aname, agg, shardable in aggs:
             for use_mesh in ([False, True] if shardable else [False]):
                 d = shards if use_mesh else 1
-                wall, final, count = timed_run(hidden, agg, use_mesh)
+                wall, h, count = timed_run(hidden, agg, use_mesh)
+                final = float(h.train_cost[-1])
                 row = {"name": f"alg1/{aname}/shard{d}/{mname}",
                        "aggregation": aname, "shards": d, "model": mname,
                        "hidden": hidden, "param_count": count,
                        "rounds": rounds, "wall_s": round(wall, 4),
                        "round_ms": round(wall / rounds * 1e3, 4),
-                       "final_cost": round(final, 6)}
+                       "final_cost": round(final, 6),
+                       "uplink_bytes_per_round": h.uplink_bytes_per_round,
+                       "downlink_bytes_per_round":
+                           h.downlink_bytes_per_round}
                 configs.append(row)
                 print(f"bench_all/{row['name']},"
                       f"{wall / rounds * 1e6:.1f},"
                       f"final_cost={final:.4f}")
+
+    # -- the communication-cost comparison: accuracy vs cumulative bytes
+    comm_rounds = rounds if args.smoke else max(rounds, 60)
+    comm_hidden = models[0][1]
+    compressors = [("dense", None),
+                   ("qsgd8", compression.qsgd(8)),
+                   ("topk10_8b", compression.topk(0.1, bits=8))]
+    comm_curves = []
+    for cname, comp in compressors:
+        for aname, agg in (("plain", None), ("secure",
+                                             aggregation.secure())):
+            kw = dict(batch_size=args.batch_size, rounds=comm_rounds,
+                      eval_every=max(1, comm_rounds // 4),
+                      eval_samples=500, hidden=comm_hidden, seed=0,
+                      aggregation=agg, compressor=comp)
+            _, h = runtime.run_alg1(data, part, **kw)
+            comm_curves.append({
+                "name": f"alg1/{cname}/{aname}",
+                "compressor": cname, "aggregation": aname,
+                "uplink_bytes_per_round": h.uplink_bytes_per_round,
+                "rounds": h.rounds,
+                "test_accuracy": [round(a, 4) for a in h.test_accuracy],
+                "cum_uplink_bytes": h.cum_uplink_bytes,
+                "comm": h.comm})
+            print(f"bench_all/comm/{cname}/{aname},"
+                  f"{h.uplink_bytes_per_round},"
+                  f"acc={h.test_accuracy[-1]:.4f}")
 
     def round_ms(name):
         return {c["name"]: c["round_ms"] for c in configs}[name]
@@ -126,13 +164,24 @@ def main(argv=None):
                  / round_ms(f"alg1/plain/shard1/{m}"), 2)
         for m, _ in models}
 
-    out = {"schema": "bench_engine/v1",
+    def curve(name):
+        return {c["name"]: c for c in comm_curves}[name]
+
+    dense_bytes = curve("alg1/dense/plain")["cum_uplink_bytes"][-1]
+    derived["uplink_reduction_vs_dense"] = {
+        c["name"]: round(dense_bytes / c["cum_uplink_bytes"][-1], 2)
+        for c in comm_curves if c["name"] != "alg1/dense/plain"}
+    derived["comm_target"] = ">= 4x fewer uplink bytes than dense for " \
+        "8-bit / top-k plain uploads at <= 2% accuracy loss"
+
+    out = {"schema": "bench_engine/v2",
            "jax": jax.__version__,
            "backend": jax.default_backend(),
            "host_devices": jax.device_count(),
            "smoke": bool(args.smoke),
            "clients": args.clients, "batch_size": args.batch_size,
-           "configs": configs, "derived": derived}
+           "configs": configs, "comm_curves": comm_curves,
+           "derived": derived}
     Path(args.out).write_text(json.dumps(out, indent=1) + "\n")
     print(f"bench_all/summary,0.0,"
           f"secure_speedup={derived['secure_streaming_speedup_vs_reference']}"

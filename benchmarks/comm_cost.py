@@ -1,8 +1,13 @@
-"""Communication cost (§I / §VI): uplink floats per round are identical
+"""Communication cost (§I / §VI): uplink bytes per round are identical
 across Algorithm 1 and the SGD baselines (one model-sized message per
 client per round) — the win is *fewer rounds to a target cost*.
 
-Derived: floats-to-target = uplink_floats_per_round × rounds_to(cost ≤ θ).
+Derived: bytes-to-target = uplink_bytes_per_round × rounds_to(cost ≤ θ),
+using the engine's exact ledger (``History.uplink_bytes_per_round`` —
+already summed over participating clients).  The deprecated
+float32-dense ``uplink_floats_per_round`` is still emitted for one
+release.  For the compressed-upload comparison (accuracy vs cumulative
+bytes under qsgd/top-k) see ``bench_all.py``'s ``comm_curves``.
 """
 from __future__ import annotations
 
@@ -37,17 +42,19 @@ def main(out_json: str = "EXPERIMENTS/comm_cost.json") -> None:
         (_, h), us = timed(runner, data, part, batch_size=BATCH,
                            rounds=ROUNDS, eval_every=1, eval_samples=5000,
                            seed=SEEDS[0], **kwargs)
-        row = {"uplink_floats_per_round": h.uplink_floats_per_round}
+        row = {"uplink_floats_per_round": h.uplink_floats_per_round,
+               "uplink_bytes_per_round": h.uplink_bytes_per_round,
+               "downlink_bytes_per_round": h.downlink_bytes_per_round}
         for θ in TARGETS:
             r = rounds_to(h, θ)
             row[f"rounds_to_{θ}"] = r
-            row[f"gfloats_to_{θ}"] = (
+            row[f"gbytes_to_{θ}"] = (
                 None if r is None
-                else r * h.uplink_floats_per_round * 10 / 1e9)  # 10 clients
+                else r * h.uplink_bytes_per_round / 1e9)
         results[name] = row
         emit(f"comm/{name}", us / ROUNDS,
              " ".join(f"r@{θ}={row[f'rounds_to_{θ}']}" for θ in TARGETS)
-             + f" floats/round={h.uplink_floats_per_round}")
+             + f" bytes/round={h.uplink_bytes_per_round}")
     Path(out_json).parent.mkdir(parents=True, exist_ok=True)
     Path(out_json).write_text(json.dumps(results, indent=1))
 

@@ -10,7 +10,6 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-import numpy as np
 
 from benchmarks.common import (ROUNDS, SEEDS, dataset, emit, fed_partition,
                                mean_history, timed)

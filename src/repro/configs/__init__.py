@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, reduced
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
 
 ARCH_IDS = (
     "granite-34b", "yi-9b", "whisper-large-v3", "granite-8b",

@@ -8,7 +8,6 @@ Every assigned architecture gets one ``<id>.py`` in this package exporting
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 

@@ -54,9 +54,26 @@ from repro.core import constrained, fedavg, ssca
 PyTree = Any
 
 
+class UploadSpec(NamedTuple):
+    """Wire metadata of one client upload: how many elements the message
+    carries, across how many pytree leaves, at what element width.  The
+    communication ledger (:mod:`repro.fed.compression`) turns this into
+    exact bytes per round for any compressor × aggregation combination.
+    """
+    elements: int       # scalar entries in the message pytree
+    leaves: int         # leaf count (per-leaf scale/exponent overhead)
+    elem_bytes: int     # dense wire width of one element
+
+
 @runtime_checkable
 class FedAlgorithm(Protocol):
-    """Structural interface consumed by :func:`repro.fed.engine.run`."""
+    """Structural interface consumed by :func:`repro.fed.engine.run`.
+
+    Uploads may pass through a :mod:`repro.fed.compression` strategy
+    before aggregation; a stateful compressor's per-client residual (the
+    error-feedback slot) is threaded by the engine as an extra scan-carry
+    element alongside ``state``, sharded over the client mesh.
+    """
 
     combine: str        # "sum" | "mean"
     local_steps: int    # E — mini-batches per client per round
@@ -73,6 +90,8 @@ class FedAlgorithm(Protocol):
 
     def round_metrics(self, state: PyTree) -> Dict[str, float]: ...
 
+    def upload_spec(self, params: PyTree) -> UploadSpec: ...
+
     def uplink_floats(self, params: PyTree) -> int: ...
 
 
@@ -81,10 +100,12 @@ def _param_count(params: PyTree) -> int:
 
 
 class _Base:
-    """Shared defaults: E=1, sum-combine with eq.-(2) weights."""
+    """Shared defaults: E=1, sum-combine with eq.-(2) weights, a dense
+    float32 model-shaped upload."""
 
     combine = "sum"
     local_steps = 1
+    upload_dtype = jnp.float32
 
     def client_weights(self, part, batch_size: int) -> np.ndarray:
         return part.weights(batch_size)            # N_i / (B·N)
@@ -92,8 +113,17 @@ class _Base:
     def round_metrics(self, state) -> Dict[str, float]:
         return {}
 
+    def upload_spec(self, params) -> UploadSpec:
+        return UploadSpec(
+            elements=_param_count(params),
+            leaves=len(jax.tree.leaves(params)),
+            elem_bytes=jnp.dtype(self.upload_dtype).itemsize)
+
     def uplink_floats(self, params) -> int:
-        return _param_count(params)
+        """Deprecated: element count only — assumes a float32 wire.  Use
+        :meth:`upload_spec` (and ``History.uplink_bytes_per_round``) for
+        dtype- and sparsity-aware accounting; kept for one release."""
+        return self.upload_spec(params).elements
 
 
 class CounterState(NamedTuple):
@@ -166,8 +196,11 @@ class SSCAConstrained(_Base):
     def round_metrics(self, state):
         return {"slack": float(state.slack[0])}
 
-    def uplink_floats(self, params):
-        return _param_count(params) + 1                      # + the value
+    def upload_spec(self, params) -> UploadSpec:
+        return UploadSpec(                                   # + the value
+            elements=_param_count(params) + 1,
+            leaves=len(jax.tree.leaves(params)) + 1,
+            elem_bytes=jnp.dtype(self.upload_dtype).itemsize)
 
 
 @dataclasses.dataclass(frozen=True)

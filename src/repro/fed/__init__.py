@@ -1,10 +1,13 @@
 """Federated runtime: the unified scan-chunked engine, composable
-aggregation strategies, single-host wrappers, and mesh-sharded execution.
+aggregation strategies, upload compression, single-host wrappers, and
+mesh-sharded execution.
 
 * :mod:`repro.fed.engine`      — generic device-resident round driver.
 * :mod:`repro.fed.aggregation` — plain / secure / sampled-client combine.
+* :mod:`repro.fed.compression` — identity / qsgd / top-k upload
+  compression with error feedback, plus the per-round byte ledger.
 * :mod:`repro.fed.runtime`     — the four paper algorithms as wrappers.
 * :mod:`repro.fed.legacy`      — the seed per-round drivers (reference).
 * :mod:`repro.fed.secure`      — float-mask secure-agg reference impl.
 """
-from repro.fed import aggregation, engine  # noqa: F401
+from repro.fed import aggregation, compression, engine  # noqa: F401

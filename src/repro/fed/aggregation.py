@@ -83,6 +83,13 @@ class Aggregation(Protocol):
 
     def finalize_combine(self, partial: PyTree) -> PyTree: ...
 
+    # -- communication-ledger hooks (repro.fed.compression) ------------
+
+    def participants(self, num_clients: int) -> int: ...
+
+    def uplink_wire_bytes(self, payload_bytes: int, dense_elements: int,
+                          num_clients: int) -> int: ...
+
 
 def _sum_clients(wmsgs: PyTree) -> PyTree:
     """Σ_i m_i over the leading client axis of every leaf."""
@@ -91,7 +98,9 @@ def _sum_clients(wmsgs: PyTree) -> PyTree:
 
 class _LinearCombine:
     """Shared sharded decomposition for strategies whose combine is a
-    plain sum: the partial is the local sum, finalize is identity."""
+    plain sum: the partial is the local sum, finalize is identity.  Also
+    the shared ledger hooks: a linear strategy puts the compressor's
+    payload on the wire as-is (full participation by default)."""
 
     def partial_combine(self, wmsgs, key, client_offset, num_clients):
         del key, client_offset, num_clients
@@ -99,6 +108,14 @@ class _LinearCombine:
 
     def finalize_combine(self, partial):
         return partial
+
+    def participants(self, num_clients: int) -> int:
+        return num_clients
+
+    def uplink_wire_bytes(self, payload_bytes: int, dense_elements: int,
+                          num_clients: int) -> int:
+        del dense_elements, num_clients
+        return payload_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +153,12 @@ class SampledClients(_LinearCombine):
         s = int(self.num_sampled)
         if not 1 <= s <= n:
             raise ValueError(f"num_sampled={s} out of range [1, {n}]")
+        if s == n:
+            # every client participates: the rescale (sum: ×n/s = ×1)
+            # and the re-normalization (mean: ÷Σλ, a float no-op only up
+            # to rounding) are both the identity — return the weights
+            # untouched so S = I is bit-identical to PlainAggregation.
+            return weights
         perm = jax.random.permutation(key, n)
         mask = jnp.zeros((n,), weights.dtype).at[perm[:s]].set(1.0)
         if combine == "mean":
@@ -146,6 +169,10 @@ class SampledClients(_LinearCombine):
     def combine_messages(self, wmsgs, key):
         del key  # selection already folded into the round weights
         return _sum_clients(wmsgs)
+
+    def participants(self, num_clients: int) -> int:
+        del num_clients  # exactly S clients upload every round
+        return int(self.num_sampled)
 
 
 @functools.lru_cache(maxsize=32)
@@ -200,7 +227,23 @@ class SecureAggregation:
         del key  # clients apply their own (static) λ_i before masking
         return weights
 
-    # -- sharded decomposition: int32 masked partials, psum-able --------
+    # -- communication-ledger hooks ------------------------------------
+
+    def participants(self, num_clients: int) -> int:
+        return num_clients
+
+    def uplink_wire_bytes(self, payload_bytes: int, dense_elements: int,
+                          num_clients: int) -> int:
+        """Masked uploads travel as the *dense* Z_{2^32} ring element —
+        4 bytes per message entry regardless of the compressor (a sparse
+        or b-bit payload cannot stay sparse/narrow under one-time-pad
+        masking without revealing the support or the range), plus one
+        4-byte pair-seed share per peer per round.  Compression still
+        shapes the message *content* (and quantized-on-grid uploads make
+        the masked aggregate exact); shrinking secure wire bytes needs
+        dimension reduction before masking, which is out of scope."""
+        del payload_bytes
+        return 4 * dense_elements + 4 * (num_clients - 1)
 
     def partial_combine(self, wmsgs, key, client_offset, num_clients):
         return _kops.secure_quant_sum(

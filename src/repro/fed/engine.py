@@ -27,10 +27,13 @@ loop:
    fallback.
 
 Per round the body is:  gather (I, [E,] B) client batches → vmap
-``client_upload`` over clients → aggregate (plain / secure / sampled) →
+``client_upload`` over clients → [compress per client, with the
+error-feedback residual threaded through the scan carry — see
+:mod:`repro.fed.compression`] → aggregate (plain / secure / sampled) →
 ``server_step``.  Evaluation happens at chunk boundaries on the host,
 preserving the seed drivers' exact eval cadence (every ``eval_every``
-rounds and at the final round).
+rounds and at the final round).  The exact wire bytes of every round are
+recorded in the :class:`History` ledger.
 """
 from __future__ import annotations
 
@@ -47,6 +50,7 @@ import numpy as np
 
 from repro.core.protocol import FedAlgorithm
 from repro.data.partition import Partition, sample_schedule
+from repro.fed import compression as compression_mod
 from repro.fed.aggregation import Aggregation, PlainAggregation
 from repro.launch import mesh as mesh_mod
 from repro.mlpapp import model as mlp
@@ -56,13 +60,35 @@ PyTree = Any
 
 @dataclasses.dataclass
 class History:
-    """Per-eval-point diagnostics; the benchmarks turn these into figures."""
+    """Per-eval-point diagnostics; the benchmarks turn these into figures.
+
+    The communication ledger lives here: ``uplink_bytes_per_round`` /
+    ``downlink_bytes_per_round`` are the *exact* wire bytes of one round
+    (dtype-, sparsity- and mask-overhead-aware, summed over the
+    participating clients — see :func:`repro.fed.compression.round_bytes`
+    and the ``comm`` breakdown), and ``cum_uplink_bytes`` is the
+    cumulative uplink at each eval point, aligned with ``rounds`` — the
+    x-axis of the paper's accuracy-vs-communication comparison.
+
+    ``uplink_floats_per_round`` is **deprecated** (kept populated for one
+    release): it counts message elements assuming a dense float32 wire,
+    which is wrong under compression, int32 secure masking, or partial
+    participation.  Use ``uplink_bytes_per_round``.
+
+    Only the engine fills the ledger; histories from the legacy
+    reference drivers leave the byte fields 0 and ``cum_uplink_bytes``
+    empty.
+    """
     rounds: List[int] = dataclasses.field(default_factory=list)
     train_cost: List[float] = dataclasses.field(default_factory=list)
     test_accuracy: List[float] = dataclasses.field(default_factory=list)
     sparsity: List[float] = dataclasses.field(default_factory=list)
     slack: List[float] = dataclasses.field(default_factory=list)
-    uplink_floats_per_round: int = 0
+    cum_uplink_bytes: List[int] = dataclasses.field(default_factory=list)
+    uplink_bytes_per_round: int = 0
+    downlink_bytes_per_round: int = 0
+    comm: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    uplink_floats_per_round: int = 0        # deprecated — see docstring
     wall_seconds: float = 0.0
 
     def as_dict(self) -> Dict[str, Any]:
@@ -105,6 +131,11 @@ def record(hist: History, t: int, measure, params, slack: float = 0.0):
     hist.test_accuracy.append(float(acc))
     hist.sparsity.append(float(sp))
     hist.slack.append(float(slack))
+    if hist.uplink_bytes_per_round:
+        # ledger-carrying histories (the engine's) get the cumulative
+        # uplink curve; legacy/reference histories, which never fill the
+        # byte fields, keep an empty list rather than a false all-zero one
+        hist.cum_uplink_bytes.append(t * hist.uplink_bytes_per_round)
 
 
 _DEVICE_CACHE: "collections.OrderedDict[int, tuple]" = \
@@ -158,11 +189,20 @@ def build_schedule(part: Partition, batch_size: int, rounds: int,
 
 @functools.lru_cache(maxsize=64)
 def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
-              mesh=None):
+              compressor=None, mesh=None):
     """The jitted scan-over-rounds body, cached per (algorithm,
-    aggregation, mesh) triple.
+    aggregation, compressor, mesh) tuple.
 
-    All three are hashable (frozen dataclasses / ``jax.sharding.Mesh``)
+    ``compressor=None`` (or the identity, normalized to ``None`` by
+    :func:`run`) traces the PR-2 body untouched — compressed and
+    uncompressed programs never share a trace, so the identity
+    trajectory stays bit-identical.  A real compressor routes to
+    :func:`_compressed_chunk_fn`, which materializes per-client messages
+    (compression is a per-client map — the linear super-batch shortcut
+    cannot apply) and threads the per-client compressor state through
+    the scan carry.
+
+    All four are hashable (frozen dataclasses / ``jax.sharding.Mesh``)
     and the data arrays are passed as arguments (not closed over), so
     repeated ``run`` calls — the multi-seed benchmark loops — reuse one
     compiled executable instead of re-tracing a fresh closure per run.
@@ -192,6 +232,9 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
     masked fixed-point uploads, whose wraparound psum reproduces the
     single-device Z_{2^32} aggregate bit-for-bit).
     """
+    if compressor is not None:
+        return _compressed_chunk_fn(algorithm, aggregation, compressor,
+                                    mesh)
     combine = algorithm.combine
 
     def chunk(params, state, x_train, y_train, weights, key_data,
@@ -264,16 +307,150 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
     return jax.jit(fn, donate_argnums=(0, 1, 6))
 
 
+def _compressed_chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
+                         compressor, mesh=None):
+    """The scan body under a non-identity compressor.
+
+    Per round: gather client batches → vmap ``client_upload`` (per-client
+    messages are always materialized — each client compresses its own
+    upload) → vmap ``compressor.compress`` with the per-client
+    error-feedback slot from the carry → participation gating → aggregate
+    → ``server_step``.  The carry is ``(params, state, cstate)`` where
+    ``cstate`` holds per-client compressor state with a leading client
+    axis; under a client mesh it is sharded over the client axis exactly
+    like the uploads (each device owns its clients' residuals).
+
+    Mean-combine algorithms compress the *model delta* m_i − ω^t (the
+    upload map the compression literature assumes: top-k of a raw model
+    would discard the model, top-k of its update is sparsification), and
+    the weighted message λ'_i(ω^t + Δ̂_i) is reassembled afterwards —
+    with the identity compressor this is algebraically the PR-2 path.
+    """
+    combine = algorithm.combine
+
+    def chunk(params, state, cstate, x_train, y_train, weights, key_data,
+              idx_chunk, ts, shard=None):
+        session_key = jax.random.wrap_key_data(key_data)
+        num_clients = weights.shape[0]
+
+        def one_round(carry, xs):
+            params, state, cstate = carry
+            idx_t, t = xs
+            key_t = jax.random.fold_in(session_key, t)
+            rw = aggregation.round_weights(weights, key_t, combine)
+            i_loc = idx_t.shape[0]
+            offset = 0
+            if shard is not None:
+                offset = jax.lax.axis_index(shard) * i_loc
+                rw = jax.lax.dynamic_slice(rw, (offset,), (i_loc,))
+            cids = (jnp.asarray(offset).astype(jnp.uint32)
+                    + jnp.arange(i_loc, dtype=jnp.uint32))
+
+            if combine == "sum":
+                xb, yb = x_train[idx_t], y_train[idx_t]      # (I, B, ·)
+                ws = jnp.broadcast_to(rw[:, None], idx_t.shape)
+                raw = jax.vmap(algorithm.client_upload,
+                               in_axes=(None, None, 0))(params, state,
+                                                        (xb, yb, ws))
+            else:                                            # mean: deltas
+                batch = (x_train[idx_t], y_train[idx_t])     # (I, E, B, ·)
+                models = jax.vmap(algorithm.client_upload,
+                                  in_axes=(None, None, 0))(params, state,
+                                                           batch)
+                raw = jax.tree.map(lambda m, p: m - p, models, params)
+
+            kd = jax.random.key_data(key_t).reshape(-1).astype(jnp.uint32)
+            k0, k1 = kd[0], kd[-1]
+            comp, new_cstate = jax.vmap(
+                lambda m, r, c: compressor.compress(m, r, k0, k1, c)
+            )(raw, cstate, cids)
+
+            # participation gating: a zero-round-weight client (sampled
+            # out) uploads nothing and must not flush its residual
+            live = rw != 0
+
+            def _sel(new, old):
+                m = live.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(m, new, old)
+
+            comp = jax.tree.map(lambda c: _sel(c, jnp.zeros_like(c)), comp)
+            new_cstate = jax.tree.map(_sel, new_cstate, cstate)
+
+            if combine == "sum":
+                msgs = comp                                  # λ' in ws
+            else:
+                msgs = jax.tree.map(
+                    lambda d, p: rw.reshape((-1,) + (1,) * (d.ndim - 1))
+                    * (p + d), comp, params)
+            if shard is None:
+                agg = aggregation.combine_messages(msgs, key_t)
+            else:
+                partial = aggregation.partial_combine(
+                    msgs, key_t, offset, num_clients)
+                agg = aggregation.finalize_combine(
+                    jax.lax.psum(partial, shard))
+            params, state = algorithm.server_step(params, state, agg)
+            return (params, state, new_cstate), None
+
+        (params, state, cstate), _ = jax.lax.scan(
+            one_round, (params, state, cstate), (idx_chunk, ts))
+        return params, state, cstate
+
+    if mesh is None:
+        return jax.jit(chunk, donate_argnums=(0, 1, 2, 7))
+
+    axis = mesh.axis_names[0]
+    spec = jax.sharding.PartitionSpec
+
+    def sharded_body(params, state, cstate, x_train, y_train, weights,
+                     key_data, idx_chunk, ts):
+        return chunk(params, state, cstate, x_train, y_train, weights,
+                     key_data, idx_chunk, ts, shard=axis)
+
+    fn = mesh_mod.shard_map_fn(
+        sharded_body, mesh,
+        in_specs=(spec(), spec(), spec(axis), spec(), spec(), spec(),
+                  spec(), spec(None, axis), spec()),
+        out_specs=(spec(), spec(), spec(axis)))
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 7))
+
+
+def _upload_avals(algorithm: FedAlgorithm, x_train, y_train,
+                  batch_size: int, params: PyTree):
+    """Shape/dtype skeleton of one client's upload message — the template
+    for per-client compressor state (error-feedback residuals)."""
+    xb = jax.ShapeDtypeStruct((batch_size,) + x_train.shape[1:],
+                              x_train.dtype)
+    yb = jax.ShapeDtypeStruct((batch_size,) + y_train.shape[1:],
+                              y_train.dtype)
+    if algorithm.combine == "sum":
+        batch = (xb, yb, jax.ShapeDtypeStruct((batch_size,), jnp.float32))
+    else:
+        e = algorithm.local_steps
+        batch = (jax.ShapeDtypeStruct((e,) + xb.shape, xb.dtype),
+                 jax.ShapeDtypeStruct((e,) + yb.shape, yb.dtype))
+    state = jax.eval_shape(algorithm.init_state, params)
+    return jax.eval_shape(algorithm.client_upload, params, state, batch)
+
+
 def run(algorithm: FedAlgorithm, data, part: Partition, *,
         batch_size: int, rounds: int, params: PyTree, seed: int = 0,
         eval_every: int = 1, eval_samples: int = 10000,
         aggregation: Optional[Aggregation] = None,
-        mesh=None) -> tuple[PyTree, History]:
+        compressor=None, mesh=None) -> tuple[PyTree, History]:
     """Run ``algorithm`` for ``rounds`` rounds under ``aggregation``.
 
     Returns the final parameters and the :class:`History` (same schema as
-    the seed drivers).  ``seed`` controls both the mini-batch schedule and
-    the per-round aggregation key (client sampling / mask derivation).
+    the seed drivers, plus the communication ledger).  ``seed`` controls
+    both the mini-batch schedule and the per-round aggregation /
+    compression key (client sampling / mask / stochastic-rounding
+    derivation).
+
+    ``compressor`` — a :mod:`repro.fed.compression` strategy applied to
+    every client upload before aggregation (``None`` or
+    ``compression.identity()``: dense uploads, bit-identical
+    trajectories).  Stateful compressors (top-k error feedback) keep a
+    per-client residual in the scan carry, sharded over the client mesh.
 
     ``mesh`` — a 1-D client mesh (:func:`repro.launch.mesh.make_client_mesh`)
     shards each round's clients over the mesh devices with psum
@@ -282,6 +459,8 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *,
     """
     aggregation = aggregation if aggregation is not None \
         else PlainAggregation()
+    if compressor is not None and compressor.is_identity:
+        compressor = None       # same trace, cache entry and trajectory
     if mesh is not None:
         ndev = mesh.shape[mesh.axis_names[0]]
         if part.num_clients % ndev:
@@ -297,14 +476,24 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *,
     weights = jnp.asarray(algorithm.client_weights(part, batch_size),
                           jnp.float32)
     key_data = jax.random.key_data(jax.random.key(seed + 10_000))
-    run_chunk = _chunk_fn(algorithm, aggregation, mesh)
+    run_chunk = _chunk_fn(algorithm, aggregation, compressor, mesh)
 
     # chunk inputs are donated — never hand the caller's param buffers to
     # the donating executable (the caller may reuse them across runs)
     params = jax.tree.map(jnp.array, params)
     state = algorithm.init_state(params)
+    cstate = None
+    if compressor is not None:
+        cstate = compressor.init_client_state(
+            _upload_avals(algorithm, x_train, y_train, batch_size, params),
+            part.num_clients)
     measure = evaluator(data, eval_samples)
-    hist = History(uplink_floats_per_round=algorithm.uplink_floats(params))
+    ledger = compression_mod.round_bytes(algorithm, aggregation, compressor,
+                                         params, part.num_clients)
+    hist = History(uplink_floats_per_round=algorithm.uplink_floats(params),
+                   uplink_bytes_per_round=ledger.uplink_total,
+                   downlink_bytes_per_round=ledger.downlink_total,
+                   comm=ledger.as_dict())
     t0 = time.time()
     done = 0
     while done < rounds:
@@ -319,9 +508,14 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *,
                 "ignore",
                 message=r"Some donated buffers were not usable: "
                         r"ShapedArray\(int32")
-            params, state = run_chunk(params, state, x_train, y_train,
-                                      weights, key_data,
-                                      idx_dev[done:done + n], ts)
+            if compressor is None:
+                params, state = run_chunk(params, state, x_train, y_train,
+                                          weights, key_data,
+                                          idx_dev[done:done + n], ts)
+            else:
+                params, state, cstate = run_chunk(
+                    params, state, cstate, x_train, y_train, weights,
+                    key_data, idx_dev[done:done + n], ts)
         done += n
         metrics = algorithm.round_metrics(state)
         record(hist, done, measure, params,

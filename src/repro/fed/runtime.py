@@ -76,6 +76,7 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
              eval_samples: int = 10000, secure: bool = False,
              fused: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
+             compressor=None,
              mesh=None) -> tuple[mlp.MLPParams, History]:
     """Algorithm 1 on the eq.-(11) objective F(ω) + λ‖ω‖².
 
@@ -93,7 +94,7 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
     return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
                       params=params, seed=seed, eval_every=eval_every,
                       eval_samples=eval_samples, aggregation=aggregation,
-                      mesh=mesh)
+                      compressor=compressor, mesh=mesh)
 
 
 def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
@@ -102,6 +103,7 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
              hidden: int = 128, eval_every: int = 1,
              eval_samples: int = 10000, secure: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
+             compressor=None,
              mesh=None) -> tuple[mlp.MLPParams, History]:
     """Algorithm 2 on eq. (18): min ‖ω‖² s.t. F(ω) ≤ U.
 
@@ -117,7 +119,7 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
     return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
                       params=params, seed=seed, eval_every=eval_every,
                       eval_samples=eval_samples, aggregation=aggregation,
-                      mesh=mesh)
+                      compressor=compressor, mesh=mesh)
 
 
 def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
@@ -126,6 +128,7 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
                hidden: int = 128, eval_every: int = 1,
                eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
+               compressor=None,
                mesh=None) -> tuple[mlp.MLPParams, History]:
     """E = 1 SGD baseline [3],[4] on the same objective as Algorithm 1."""
     params = _init(data, seed, hidden, params)
@@ -134,7 +137,7 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
     return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
                       params=params, seed=seed, eval_every=eval_every,
                       eval_samples=eval_samples, aggregation=aggregation,
-                      mesh=mesh)
+                      compressor=compressor, mesh=mesh)
 
 
 def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
@@ -143,6 +146,7 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
                params: Optional[mlp.MLPParams] = None, hidden: int = 128,
                eval_every: int = 1, eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
+               compressor=None,
                mesh=None) -> tuple[mlp.MLPParams, History]:
     """FedAvg [3] / PR-SGD [5]: E local steps per round, then model average.
 
@@ -155,4 +159,4 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
     return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
                       params=params, seed=seed, eval_every=eval_every,
                       eval_samples=eval_samples, aggregation=aggregation,
-                      mesh=mesh)
+                      compressor=compressor, mesh=mesh)

@@ -7,7 +7,6 @@ TPU the same calls compile to Mosaic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

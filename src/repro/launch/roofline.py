@@ -15,7 +15,6 @@ ring-collective traffic, which is what a schedule-level comparison needs.
 """
 from __future__ import annotations
 
-import math
 import re
 from typing import Dict
 

@@ -19,8 +19,6 @@ identical communication, first-order-only update (the paper's comparison).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

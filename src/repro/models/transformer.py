@@ -28,7 +28,6 @@ and activation memory is one layer deep.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax

@@ -19,7 +19,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import numpy as np
 
 from repro.data import partition, synthetic
-from repro.fed import aggregation, runtime
+from repro.fed import aggregation, compression, runtime
 from repro.launch.mesh import make_client_mesh
 
 
@@ -36,7 +36,22 @@ def main():
         ("alg1/secure", runtime.run_alg1, {"secure": True}),
         ("alg1/sampled", runtime.run_alg1,
          {"aggregation": aggregation.sampled(4)}),
+        # S = 1: the I/S weight rescale must happen identically on the
+        # device that owns the sampled client (replicated round weights,
+        # local slice) — the sharded sampled-rescaling edge case
+        ("alg1/sampled1", runtime.run_alg1,
+         {"aggregation": aggregation.sampled(1)}),
         ("fedavg", runtime.run_fedavg, {"local_steps": 2, "lr_a": 2.0}),
+        # compressed uploads: per-client PRF streams are counter-mode,
+        # so the stream a client's quantizer draws is identical on
+        # whichever device owns it — sharded == single-device
+        ("alg1/qsgd8", runtime.run_alg1,
+         {"compressor": compression.qsgd(8)}),
+        ("alg1/topk8+secure", runtime.run_alg1,
+         {"compressor": compression.topk(0.2, bits=8), "secure": True}),
+        ("fedavg/topk", runtime.run_fedavg,
+         {"local_steps": 2, "lr_a": 2.0,
+          "compressor": compression.topk(0.3)}),
     ]
     for name, fn, extra in cases:
         _, h1 = fn(data, part, **kw, **extra)
@@ -50,6 +65,13 @@ def main():
         # psum reassociation only (secure is bit-exact in the aggregate)
         assert gap < 5e-5, (name, gap)
         assert acc_gap < 2e-3, (name, acc_gap)
+
+    # identity compression on the mesh is bit-identical to no compressor
+    _, h_n = runtime.run_alg1(data, part, mesh=mesh, **kw)
+    _, h_i = runtime.run_alg1(data, part, mesh=mesh,
+                              compressor=compression.identity(), **kw)
+    np.testing.assert_array_equal(h_n.train_cost, h_i.train_cost)
+    print("identity-on-mesh  bitwise OK")
 
     # a mesh that does not divide I is refused, not silently truncated
     part7 = partition.iid(700, 7, seed=0)

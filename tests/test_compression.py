@@ -1,0 +1,301 @@
+"""Upload-compression subsystem: unbiasedness, error feedback, exactness.
+
+The contracts of :mod:`repro.fed.compression` /
+:mod:`repro.kernels.compress`:
+
+* identity compression is a true no-op — bit-identical trajectories to
+  running with no compressor, for all four algorithms;
+* stochastic quantization is unbiased (E[x̂] = x) and its power-of-two
+  lattice composes with secure aggregation *exactly*: the Z_{2^32}
+  masked aggregate of quantized uploads equals their plain sum
+  bit-for-bit (kernel and mask-materializing reference paths);
+* top-k error feedback contracts: ‖residual‖ ≤ √(1 − k/n)·‖input‖ per
+  application, and the residual is exactly input − output;
+* the Pallas kernel (interpret mode) and the XLA fallback consume the
+  same counter-mode PRF stream and return bit-identical outputs;
+* the ledger arithmetic (payload bytes, wire overhead, participants) is
+  exact.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fed import aggregation, compression, runtime
+from repro.kernels import compress as kc
+
+KW = dict(batch_size=10, rounds=6, eval_every=3, eval_samples=300, seed=3)
+
+ALGS = [
+    ("alg1", runtime.run_alg1, {}),
+    ("alg2", runtime.run_alg2, {"limit_u": 0.4}),
+    ("fedsgd", runtime.run_fedsgd, {"lr_a": 2.0}),
+    ("fedavg", runtime.run_fedavg, {"local_steps": 2, "lr_a": 2.0}),
+]
+
+
+# ---------------------------------------------------------------------------
+# identity == no compressor (satellite: bit-identical trajectories)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,fn,kw", ALGS, ids=[a[0] for a in ALGS])
+def test_identity_compressor_bit_identical(dataset, fed_partition, name,
+                                           fn, kw):
+    _, h0 = fn(dataset, fed_partition, **KW, **kw)
+    _, h1 = fn(dataset, fed_partition,
+               compressor=compression.identity(), **KW, **kw)
+    np.testing.assert_array_equal(h0.train_cost, h1.train_cost)
+    np.testing.assert_array_equal(h0.test_accuracy, h1.test_accuracy)
+
+
+# ---------------------------------------------------------------------------
+# kernel == XLA fallback, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantize,masked",
+                         [(True, False), (False, True), (True, True)])
+def test_kernel_bit_exact_vs_xla(quantize, masked):
+    x = jax.random.normal(jax.random.key(0), (9, kc.LANES)) \
+        .astype(jnp.float32)
+    seed = kc.client_stream_seed(jnp.uint32(11), jnp.uint32(22),
+                                 jnp.uint32(3))
+    su = jnp.stack([seed, jnp.uint32(640)])      # nonzero counter base
+    delta = compression._pow2_step(jnp.max(jnp.abs(x)), 127)
+    sf = jnp.stack([jnp.float32(0.3), delta])
+    a = kc.compress_2d_xla(x, su, sf, lbound=127, quantize=quantize,
+                           masked=masked)
+    b = kc.compress_2d_kernel(x, su, sf, lbound=127, quantize=quantize,
+                              masked=masked, interpret=True)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_client_streams_independent():
+    """Different clients (and rounds) draw different rounding bits."""
+    x = {"w": 0.37 * jnp.ones((128,), jnp.float32)}
+    comp = compression.qsgd(4)
+    a, _ = comp.compress(x, (), jnp.uint32(1), jnp.uint32(2), jnp.uint32(0))
+    b, _ = comp.compress(x, (), jnp.uint32(1), jnp.uint32(2), jnp.uint32(1))
+    c, _ = comp.compress(x, (), jnp.uint32(9), jnp.uint32(2), jnp.uint32(0))
+    assert not np.array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    assert not np.array_equal(np.asarray(a["w"]), np.asarray(c["w"]))
+
+
+# ---------------------------------------------------------------------------
+# stochastic quantization: unbiasedness (satellite: hypothesis property)
+# ---------------------------------------------------------------------------
+
+def _mc_mean(comp, msg, draws=1024):
+    def one(cid):
+        out, _ = comp.compress(msg, (), jnp.uint32(5), jnp.uint32(9), cid)
+        return out["w"]
+    outs = jax.lax.map(one, jnp.arange(draws, dtype=jnp.uint32))
+    return outs.mean(0), outs.std()
+
+
+def test_quantizer_unbiased_monte_carlo():
+    msg = {"w": jax.random.normal(jax.random.key(1), (64,))}
+    mean, sd = _mc_mean(compression.qsgd(4), msg)
+    err = float(jnp.max(jnp.abs(mean - msg["w"])))
+    assert err < 6.0 * float(sd) / math.sqrt(1024) + 1e-3
+
+
+def test_quantizer_unbiased_property():
+    hyp = pytest.importorskip("hypothesis")
+    given, settings, st = hyp.given, hyp.settings, hyp.strategies
+
+    @given(bits=st.integers(2, 8), seed=st.integers(0, 2 ** 16),
+           scale=st.floats(1e-4, 1e3))
+    @settings(max_examples=15, deadline=None)
+    def check(bits, seed, scale):
+        msg = {"w": scale * jax.random.normal(jax.random.key(seed), (32,))}
+        mean, sd = _mc_mean(compression.qsgd(bits), msg, draws=512)
+        err = float(jnp.max(jnp.abs(mean - msg["w"])))
+        # 6σ Monte-Carlo band around the unbiased mean
+        assert err < 6.0 * float(sd) / math.sqrt(512) + 1e-6 * scale
+
+    check()
+
+
+def test_quantizer_lattice_and_range():
+    """Outputs are integer multiples of one power-of-two Δ per leaf with
+    |level| ≤ L — the b-bit wire format is honest."""
+    bits = 6
+    lbound = 2 ** (bits - 1) - 1
+    msg = {"w": jax.random.normal(jax.random.key(2), (257,)) * 3.3}
+    out, _ = compression.qsgd(bits).compress(
+        msg, (), jnp.uint32(1), jnp.uint32(2), jnp.uint32(0))
+    delta = float(compression._pow2_step(jnp.max(jnp.abs(msg["w"])), lbound))
+    levels = np.asarray(out["w"]) / delta
+    np.testing.assert_array_equal(levels, np.round(levels))
+    assert np.abs(levels).max() <= lbound
+
+
+# ---------------------------------------------------------------------------
+# composition with secure aggregation (acceptance: exact cancellation)
+# ---------------------------------------------------------------------------
+
+def _quantized_client_messages(n=6, bits=8):
+    msgs = {"w": jax.random.normal(jax.random.key(2), (n, 300)) * 0.05,
+            "b": jax.random.normal(jax.random.key(3), (n, 7))}
+    comp = compression.qsgd(bits)
+    return jax.vmap(lambda m, c: comp.compress(
+        m, (), jnp.uint32(1), jnp.uint32(2), c)[0])(
+            msgs, jnp.arange(n, dtype=jnp.uint32))
+
+
+def test_quantized_uploads_secure_equals_plain_bitwise():
+    """Power-of-two-lattice quantized messages sit exactly on the secure
+    fixed-point grid: the masked Z_{2^32} aggregate equals the plain sum
+    bit-for-bit — streaming kernel AND mask-materializing reference."""
+    qmsgs = _quantized_client_messages()
+    key = jax.random.key(7)
+    plain = aggregation.plain().combine_messages(qmsgs, key)
+    stream = aggregation.secure().combine_messages(qmsgs, key)
+    ref = aggregation.secure(streaming=False).combine_messages(qmsgs, key)
+    for a, b, c in zip(jax.tree.leaves(plain), jax.tree.leaves(stream),
+                       jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# top-k + error feedback
+# ---------------------------------------------------------------------------
+
+def test_topk_threshold_and_residual_exact():
+    msg = {"w": jax.random.normal(jax.random.key(4), (200,))}
+    comp = compression.topk(0.1)
+    resid0 = jax.tree.map(jnp.zeros_like, msg)
+    out, resid = comp.compress(msg, resid0, jnp.uint32(1), jnp.uint32(2),
+                               jnp.uint32(0))
+    w, o, r = (np.asarray(msg["w"]), np.asarray(out["w"]),
+               np.asarray(resid["w"]))
+    k = comp._k(200)
+    assert (o != 0).sum() == k                    # no ties in float noise
+    kept = np.sort(np.abs(w))[-k:]
+    assert np.abs(o[o != 0]).min() >= kept.min()  # the k largest survive
+    np.testing.assert_array_equal(o + r, w)       # residual is exact
+
+
+def test_topk_error_feedback_contracts():
+    """‖residual‖ after compressing m + r is ≤ √(1 − k/n)·‖m + r‖ —
+    the contraction that makes error feedback converge — and stays
+    bounded over rounds instead of accumulating."""
+    frac = 0.25
+    comp = compression.topk(frac)
+    msg = {"w": jax.random.normal(jax.random.key(5), (256,))}
+    resid = jax.tree.map(jnp.zeros_like, msg)
+    norms = []
+    for t in range(12):
+        inp = float(jnp.linalg.norm(msg["w"] + resid["w"]))
+        _, resid = comp.compress(msg, resid, jnp.uint32(3), jnp.uint32(4),
+                                 jnp.uint32(t))
+        r = float(jnp.linalg.norm(resid["w"]))
+        assert r <= math.sqrt(1.0 - frac) * inp + 1e-5
+        norms.append(r)
+    # geometric-series bound: ‖r‖ ≲ √(1−δ)/(1−√(1−δ)) · ‖m‖
+    bound = math.sqrt(1 - frac) / (1 - math.sqrt(1 - frac)) \
+        * float(jnp.linalg.norm(msg["w"]))
+    assert max(norms) <= bound * 1.05
+
+
+def test_topk_runs_all_four_algorithms(dataset, fed_partition):
+    for name, fn, kw in ALGS:
+        _, h = fn(dataset, fed_partition,
+                  compressor=compression.topk(0.2, bits=8), **KW, **kw)
+        assert np.isfinite(h.train_cost[-1]), name
+
+
+def test_sampled_client_residual_not_flushed(dataset, fed_partition):
+    """Participation gating: with S of I sampling the engine must not let
+    sampled-out clients upload their residual (a zero message plus error
+    feedback would otherwise top-k the residual itself)."""
+    _, h = runtime.run_alg1(dataset, fed_partition,
+                            compressor=compression.topk(0.2),
+                            aggregation=aggregation.sampled(3), **KW)
+    assert np.isfinite(h.train_cost[-1])
+    # ledger charges exactly the S participants
+    assert h.comm["participants"] == 3
+    assert h.uplink_bytes_per_round == 3 * h.comm["uplink_per_client"]
+
+
+# ---------------------------------------------------------------------------
+# the ledger (satellite: dtype-aware byte accounting)
+# ---------------------------------------------------------------------------
+
+def test_payload_bytes_arithmetic():
+    n, leaves = 101_632, 2
+    assert compression.identity().payload_bytes(n, leaves, 4) == 4 * n
+    q8 = compression.qsgd(8).payload_bytes(n, leaves, 4)
+    assert q8 == n + 4 * leaves                   # 8 bits/elem + exponents
+    k = math.ceil(0.1 * n)
+    tk = compression.topk(0.1).payload_bytes(n, leaves, 4)
+    assert tk == k * 8                            # f32 value + i32 index
+    tk8 = compression.topk(0.1, bits=8).payload_bytes(n, leaves, 4)
+    assert tk8 == k + 4 * k + 4                   # levels + indices + scale
+
+
+def test_round_bytes_secure_wire_overhead():
+    """Secure wire = dense int32 ring + one 4-byte seed share per peer,
+    independent of the compressor's payload."""
+    params = {"w": jnp.zeros((100,)), "b": jnp.zeros((3,))}
+    from repro.core import protocol, ssca
+    alg = protocol.SSCAUnconstrained(loss_fn=None,
+                                     hp=ssca.SSCAHyperParams())
+    for comp in (None, compression.qsgd(8), compression.topk(0.1)):
+        rb = compression.round_bytes(alg, aggregation.secure(), comp,
+                                     params, num_clients=8)
+        assert rb.uplink_per_client == 4 * 103 + 4 * 7
+        assert rb.uplink_total == 8 * rb.uplink_per_client
+        assert rb.downlink_per_client == 4 * 103
+    rb = compression.round_bytes(alg, aggregation.sampled(3),
+                                 compression.qsgd(8), params, 8)
+    assert rb.participants == 3
+    assert rb.uplink_per_client == 103 + 4 * 2
+    assert rb.uplink_total == 3 * (103 + 8)
+
+
+def test_history_ledger_populated(dataset, fed_partition):
+    _, h = runtime.run_alg1(dataset, fed_partition,
+                            compressor=compression.qsgd(8), **KW)
+    assert h.uplink_bytes_per_round > 0
+    assert h.downlink_bytes_per_round > 0
+    assert h.comm["breakdown"]["compressor"] == "qsgd"
+    np.testing.assert_array_equal(
+        h.cum_uplink_bytes,
+        [r * h.uplink_bytes_per_round for r in h.rounds])
+    # deprecated field still populated (float32-dense element count)
+    assert h.uplink_floats_per_round == h.comm["breakdown"][
+        "upload_elements"]
+
+
+def test_construction_validation():
+    for bad in (0, 1, 17, True, 8.0):
+        with pytest.raises(ValueError, match="bits"):
+            compression.StochasticQuantizer(bits=bad)
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError, match="fraction"):
+            compression.TopKCompressor(fraction=bad)
+    with pytest.raises(ValueError, match="bits"):
+        compression.TopKCompressor(fraction=0.1, bits=1)
+
+
+# ---------------------------------------------------------------------------
+# the communication-cost claim (acceptance smoke)
+# ---------------------------------------------------------------------------
+
+def test_compressed_uplink_reduction_at_small_accuracy_loss(dataset,
+                                                            fed_partition):
+    """topk(10%, 8-bit) under plain aggregation: ≥ 4× fewer cumulative
+    uplink bytes than dense at a small accuracy loss."""
+    kw = dict(batch_size=20, rounds=40, eval_every=40, eval_samples=500,
+              seed=0)
+    _, hd = runtime.run_alg1(dataset, fed_partition, **kw)
+    _, hc = runtime.run_alg1(dataset, fed_partition,
+                             compressor=compression.topk(0.1, bits=8), **kw)
+    ratio = hd.cum_uplink_bytes[-1] / hc.cum_uplink_bytes[-1]
+    assert ratio >= 4.0, ratio
+    assert hd.test_accuracy[-1] - hc.test_accuracy[-1] <= 0.02

@@ -12,7 +12,6 @@ Also checks Theorem 2's constrained analogue: |F̄_m^t(ω^t) − F_m(ω^t)| → 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import constrained, ssca
 from repro.core.schedules import PowerLaw

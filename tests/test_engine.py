@@ -19,7 +19,7 @@ import pytest
 
 from repro.core import protocol, ssca
 from repro.data import partition
-from repro.fed import aggregation, engine, legacy, runtime
+from repro.fed import aggregation, legacy, runtime
 
 
 # ---------------------------------------------------------------------------
@@ -197,6 +197,70 @@ def test_secure_alg2_matches_plain_trajectory(dataset, fed_partition):
                               limit_u=0.4, secure=True)
     np.testing.assert_allclose(h_s.train_cost, h_p.train_cost, atol=1e-4)
     np.testing.assert_allclose(h_s.slack, h_p.slack, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SampledClients edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+def test_sampled_full_participation_matches_plain_bitwise(dataset,
+                                                          fed_partition):
+    """S = I must be *bit-identical* to PlainAggregation: the rescale
+    I/S = 1 and the mean re-normalization are short-circuited so no
+    float rounding can creep in."""
+    n = fed_partition.num_clients
+    weights = jnp.asarray(
+        np.random.default_rng(1).dirichlet(np.ones(n)), jnp.float32)
+    full = aggregation.sampled(n)
+    for combine in ("sum", "mean"):
+        rw = full.round_weights(weights, jax.random.key(0), combine)
+        np.testing.assert_array_equal(np.asarray(rw), np.asarray(weights))
+    kw = dict(batch_size=10, rounds=5, eval_every=5, eval_samples=300,
+              seed=2)
+    _, h_p = runtime.run_alg1(dataset, fed_partition, **kw)
+    _, h_s = runtime.run_alg1(dataset, fed_partition,
+                              aggregation=aggregation.sampled(n), **kw)
+    np.testing.assert_array_equal(h_p.train_cost, h_s.train_cost)
+    _, h_pm = runtime.run_fedavg(dataset, fed_partition, lr_a=2.0, **kw)
+    _, h_sm = runtime.run_fedavg(dataset, fed_partition, lr_a=2.0,
+                                 aggregation=aggregation.sampled(n), **kw)
+    np.testing.assert_array_equal(h_pm.train_cost, h_sm.train_cost)
+
+
+def test_sampled_single_client(dataset, fed_partition):
+    """S = 1: exactly one client per round, sum-combine weight rescaled
+    by I (unbiased), mean-combine weight exactly 1; the engine runs and
+    learns finitely."""
+    n = 8
+    weights = jnp.asarray(
+        np.random.default_rng(2).dirichlet(np.ones(n)), jnp.float32)
+    one = aggregation.sampled(1)
+    keys = jax.random.split(jax.random.key(3), 64)
+    for combine, check in (
+            ("sum", lambda rw, i: np.testing.assert_allclose(
+                rw[i], weights[i] * n, rtol=1e-6)),
+            ("mean", lambda rw, i: np.testing.assert_allclose(
+                rw[i], 1.0, rtol=1e-6))):
+        rws = jax.vmap(lambda k: one.round_weights(weights, k, combine)
+                       )(keys)
+        for rw in np.asarray(rws):
+            (idx,) = np.nonzero(rw)
+            assert len(idx) == 1
+            check(rw, idx[0])
+    for fn, kw in ((runtime.run_alg1, {}),
+                   (runtime.run_fedavg, {"lr_a": 2.0})):
+        _, h = fn(dataset, fed_partition, batch_size=10, rounds=4,
+                  eval_every=4, eval_samples=200,
+                  aggregation=aggregation.sampled(1), **kw)
+        assert np.isfinite(h.train_cost[-1])
+
+
+def test_sampled_out_of_range_rejected():
+    weights = jnp.ones((4,), jnp.float32) / 4
+    for bad in (0, 5, -1):
+        with pytest.raises(ValueError, match="out of range"):
+            aggregation.sampled(bad).round_weights(
+                weights, jax.random.key(0), "sum")
 
 
 # ---------------------------------------------------------------------------

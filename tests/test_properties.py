@@ -8,7 +8,6 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import constrained, ssca
-from repro.core.schedules import PowerLaw
 from repro.data import partition
 
 SETTINGS = dict(max_examples=25, deadline=None)
