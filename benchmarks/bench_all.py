@@ -12,13 +12,20 @@ reference — is recorded under ``derived.secure_streaming_speedup``;
 both paths produce bit-identical aggregates, so the ratio is pure
 implementation speed.
 
-Schema v2 adds the **communication ledger**: every config row carries
+Schema v2 added the **communication ledger**: every config row carries
 ``uplink_bytes_per_round`` (exact wire bytes, dtype/sparsity/mask-
 overhead aware), and the ``comm_curves`` section records
 accuracy-vs-cumulative-uplink-bytes for {dense, 8-bit quantized,
 top-k 10% + 8-bit} × {plain, secure} uploads — the paper's
 communication-cost comparison, with
 ``derived.uplink_reduction_vs_dense`` as the headline ratios.
+
+Schema v3 adds the **task dimension** (the FedTask refactor): every
+``configs`` row carries ``"task"`` (the MLP grid), and the ``tasks``
+section runs each non-MLP built-in task — a reduced transformer and
+RWKV-6 — through real federated rounds on the client mesh composed
+with secure aggregation + qsgd-compressed uploads, recording the
+task-declared metric schema and its ledger row.
 
     PYTHONPATH=src python benchmarks/bench_all.py [--smoke]
 
@@ -111,6 +118,7 @@ def main(argv=None):
                 wall, h, count = timed_run(hidden, agg, use_mesh)
                 final = float(h.train_cost[-1])
                 row = {"name": f"alg1/{aname}/shard{d}/{mname}",
+                       "task": "mlp",
                        "aggregation": aname, "shards": d, "model": mname,
                        "hidden": hidden, "param_count": count,
                        "rounds": rounds, "wall_s": round(wall, 4),
@@ -151,6 +159,38 @@ def main(argv=None):
                   f"{h.uplink_bytes_per_round},"
                   f"acc={h.test_accuracy[-1]:.4f}")
 
+    # -- the task dimension: non-MLP FedTasks through real federated
+    # rounds on the client mesh, secure + compressed (the FedTask
+    # refactor's acceptance scenario)
+    from repro.fed.tasks import rwkv6_task, transformer_task
+    task_rounds = 4 if args.smoke else 12
+    task_rows = []
+    for task in (transformer_task(seq_len=16, d_model=32, vocab=64),
+                 rwkv6_task(seq_len=16, d_model=32, vocab=64)):
+        tdata = task.default_data(n_train=32 * args.clients, n_test=64,
+                                  seed=0)
+        tpart = partition.iid(len(tdata.x_train), args.clients, seed=0)
+        kw = dict(batch_size=4, rounds=task_rounds, eval_every=task_rounds,
+                  eval_samples=128, seed=0, tau=2.0, lam=0.0,
+                  aggregation=aggregation.secure(),
+                  compressor=compression.qsgd(8), mesh=mesh)
+        runtime.run_alg1(tdata, tpart, task=task, **kw)   # compile + stage
+        _, h = runtime.run_alg1(tdata, tpart, task=task, **kw)
+        row = {"name": f"alg1/{task.name}/secure+qsgd8/shard{shards}",
+               "task": task.name, "aggregation": "secure",
+               "compressor": "qsgd8", "shards": shards,
+               "rounds": task_rounds,
+               "wall_s": round(h.wall_seconds, 4),
+               "round_ms": round(h.wall_seconds / task_rounds * 1e3, 4),
+               "metrics": {k: [round(v, 6) for v in series]
+                           for k, series in h.metrics.items()},
+               "uplink_bytes_per_round": h.uplink_bytes_per_round,
+               "downlink_bytes_per_round": h.downlink_bytes_per_round}
+        task_rows.append(row)
+        print(f"bench_all/{row['name']},"
+              f"{h.wall_seconds / task_rounds * 1e6:.1f},"
+              f"final_cost={h.metrics['train_cost'][-1]:.4f}")
+
     def round_ms(name):
         return {c["name"]: c["round_ms"] for c in configs}[name]
 
@@ -174,13 +214,14 @@ def main(argv=None):
     derived["comm_target"] = ">= 4x fewer uplink bytes than dense for " \
         "8-bit / top-k plain uploads at <= 2% accuracy loss"
 
-    out = {"schema": "bench_engine/v2",
+    out = {"schema": "bench_engine/v3",
            "jax": jax.__version__,
            "backend": jax.default_backend(),
            "host_devices": jax.device_count(),
            "smoke": bool(args.smoke),
            "clients": args.clients, "batch_size": args.batch_size,
-           "configs": configs, "comm_curves": comm_curves,
+           "configs": configs, "tasks": task_rows,
+           "comm_curves": comm_curves,
            "derived": derived}
     Path(args.out).write_text(json.dumps(out, indent=1) + "\n")
     print(f"bench_all/summary,0.0,"

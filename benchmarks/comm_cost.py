@@ -5,9 +5,10 @@ client per round) — the win is *fewer rounds to a target cost*.
 Derived: bytes-to-target = uplink_bytes_per_round × rounds_to(cost ≤ θ),
 using the engine's exact ledger (``History.uplink_bytes_per_round`` —
 already summed over participating clients).  The deprecated
-float32-dense ``uplink_floats_per_round`` is still emitted for one
-release.  For the compressed-upload comparison (accuracy vs cumulative
-bytes under qsgd/top-k) see ``bench_all.py``'s ``comm_curves``.
+float32-dense ``uplink_floats_per_round`` is no longer read here (it
+now warns on read; see the README removal timeline).  For the
+compressed-upload comparison (accuracy vs cumulative bytes under
+qsgd/top-k) see ``bench_all.py``'s ``comm_curves``.
 """
 from __future__ import annotations
 
@@ -42,9 +43,9 @@ def main(out_json: str = "EXPERIMENTS/comm_cost.json") -> None:
         (_, h), us = timed(runner, data, part, batch_size=BATCH,
                            rounds=ROUNDS, eval_every=1, eval_samples=5000,
                            seed=SEEDS[0], **kwargs)
-        row = {"uplink_floats_per_round": h.uplink_floats_per_round,
-               "uplink_bytes_per_round": h.uplink_bytes_per_round,
-               "downlink_bytes_per_round": h.downlink_bytes_per_round}
+        row = {"uplink_bytes_per_round": h.uplink_bytes_per_round,
+               "downlink_bytes_per_round": h.downlink_bytes_per_round,
+               "comm": h.comm}
         for θ in TARGETS:
             r = rounds_to(h, θ)
             row[f"rounds_to_{θ}"] = r

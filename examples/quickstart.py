@@ -38,7 +38,7 @@ def main():
 
     print(f"\nSSCA final cost {h_ssca.train_cost[-1]:.4f} "
           f"vs FedSGD {h_sgd.train_cost[-1]:.4f} "
-          f"(same {h_ssca.uplink_floats_per_round} uplink floats/round) — "
+          f"(same {h_ssca.uplink_bytes_per_round} uplink bytes/round) — "
           "the paper's claim (i).")
 
 

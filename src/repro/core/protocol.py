@@ -17,6 +17,16 @@ partial participation).  The generic driver in :mod:`repro.fed.engine`
 runs any ``FedAlgorithm`` × any aggregation as one ``lax.scan`` over
 rounds.
 
+Algorithms are **model-agnostic**: each constructor takes its loss as a
+callable — in practice a :class:`repro.fed.tasks.base.SumLoss` view of a
+:class:`repro.fed.tasks.base.FedTask` (sum-combine) or a
+:class:`repro.fed.tasks.base.LocalObjective` (mean-combine) — so the
+same four implementations train the paper's MLP, a reduced transformer,
+or RWKV-6 unchanged.  Loss callables must be hashable and compare equal
+when built from equal tasks (the frozen-dataclass wrappers are; raw
+bound methods are *not* — CPython compares ``__self__`` by identity):
+the engine's compiled-chunk cache keys on the algorithm instance.
+
 Aggregation semantics are declared, not hard-coded:
 
 * ``combine = "sum"`` — the upload is a per-sample-weighted statistic

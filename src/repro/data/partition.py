@@ -37,16 +37,41 @@ def iid(n: int, num_clients: int, seed: int = 0) -> Partition:
 
 
 def dirichlet(labels: np.ndarray, num_clients: int, alpha: float = 0.5,
-              seed: int = 0, min_size: int = 1) -> Partition:
+              seed: int = 0, min_size: int = 1,
+              max_draws: int = 25) -> Partition:
     """Label-skewed non-IID split (standard Dirichlet protocol).
 
     ``labels``: (N,) integer class labels.  Smaller alpha ⇒ more skew —
     this is the heterogeneity regime where FedAvg with E>1 degrades (the
     paper's §I motivation for one-shot aggregation per round).
+
+    Every client is guaranteed ≥ ``min_size`` samples: an empty client
+    would poison the whole downstream pipeline (``_padded_indices`` pads
+    rows with ``idx[0]`` and the batch gathers would sample from a
+    zero-length pool).  At small alpha the Dirichlet proportions
+    routinely starve clients, so the split re-draws up to ``max_draws``
+    times and then falls back to a deterministic **min-quota repair** on
+    the best draw: under-quota clients take samples from the largest
+    clients one at a time (label skew is preserved up to the few moved
+    samples; a pure re-draw loop can spin forever when
+    ``num_clients·min_size`` is close to N).
     """
+    if min_size < 1:
+        raise ValueError(f"min_size={min_size} must be >= 1 (an empty "
+                         "client breaks the batch sampler)")
+    if max_draws < 1:
+        raise ValueError(f"max_draws={max_draws} must be >= 1 (the "
+                         "quota repair needs a draw to start from)")
+    n = len(labels)
+    if num_clients * min_size > n:
+        raise ValueError(
+            f"cannot give {num_clients} clients >= {min_size} samples "
+            f"each from N={n}")
     rng = np.random.default_rng(seed)
     n_classes = int(labels.max()) + 1
-    while True:
+    best: List[list] = []
+    best_min = -1
+    for _ in range(max_draws):
         idx_per_client: List[list] = [[] for _ in range(num_clients)]
         for c in range(n_classes):
             idx_c = np.where(labels == c)[0]
@@ -55,9 +80,23 @@ def dirichlet(labels: np.ndarray, num_clients: int, alpha: float = 0.5,
             cuts = (np.cumsum(props) * len(idx_c)).astype(int)[:-1]
             for i, part in enumerate(np.split(idx_c, cuts)):
                 idx_per_client[i].extend(part.tolist())
-        if min(len(ix) for ix in idx_per_client) >= min_size:
+        smallest = min(len(ix) for ix in idx_per_client)
+        if smallest >= min_size:
+            best = idx_per_client
             break
-    indices = [np.asarray(sorted(ix), np.int64) for ix in idx_per_client]
+        if smallest > best_min:
+            best, best_min = idx_per_client, smallest
+    else:
+        # min-quota repair: top up each starved client from whichever
+        # client is currently largest (never dropping *it* below quota)
+        sizes = [len(ix) for ix in best]
+        for i in range(num_clients):
+            while sizes[i] < min_size:
+                donor = int(np.argmax(sizes))
+                best[i].append(best[donor].pop())
+                sizes[i] += 1
+                sizes[donor] -= 1
+    indices = [np.asarray(sorted(ix), np.int64) for ix in best]
     return Partition(indices,
                      np.asarray([len(ix) for ix in indices], np.int64))
 

@@ -1,13 +1,16 @@
-"""Federated runtime: the unified scan-chunked engine, composable
-aggregation strategies, upload compression, single-host wrappers, and
-mesh-sharded execution.
+"""Federated runtime: the unified scan-chunked engine, the FedTask
+model contract, composable aggregation strategies, upload compression,
+single-host wrappers, and mesh-sharded execution.
 
-* :mod:`repro.fed.engine`      — generic device-resident round driver.
+* :mod:`repro.fed.engine`      — task-agnostic device-resident driver.
+* :mod:`repro.fed.tasks`       — FedTask: init / losses / metric schema /
+  data source per model (mlp, transformer, rwkv6 built in).
 * :mod:`repro.fed.aggregation` — plain / secure / sampled-client combine.
 * :mod:`repro.fed.compression` — identity / qsgd / top-k upload
   compression with error feedback, plus the per-round byte ledger.
-* :mod:`repro.fed.runtime`     — the four paper algorithms as wrappers.
+* :mod:`repro.fed.runtime`     — the four paper algorithms as thin
+  task-parametric wrappers (MLP task by default).
 * :mod:`repro.fed.legacy`      — the seed per-round drivers (reference).
 * :mod:`repro.fed.secure`      — float-mask secure-agg reference impl.
 """
-from repro.fed import aggregation, compression, engine  # noqa: F401
+from repro.fed import aggregation, compression, engine, tasks  # noqa: F401

@@ -1,22 +1,26 @@
 """The unified federated driver: one ``lax.scan`` per eval interval.
 
-The seed ran four copy-pasted Python round loops, each re-gathering every
-client's mini-batch on the host and paying one XLA dispatch per round —
-the dominant wall-clock cost of the benchmark drivers.  This engine runs
-*any* :class:`repro.core.protocol.FedAlgorithm` with *any*
-:class:`repro.fed.aggregation.Aggregation` strategy as a device-resident
+The engine is **task-agnostic**: it runs any
+:class:`repro.core.protocol.FedAlgorithm` (which closes over a
+:class:`repro.fed.tasks.base.FedTask`'s loss) with any
+:class:`repro.fed.aggregation.Aggregation` strategy and any
+:mod:`repro.fed.compression` compressor, over any task's data — the
+MNIST MLP, a reduced decoder-only LM, RWKV-6 — as one device-resident
 loop:
 
 1. the whole mini-batch index schedule (T, I, [E,] B) is drawn up front
    (one vectorized host call, :func:`repro.data.partition.sample_schedule`)
    and transferred once;
 2. the training arrays live on device; per-round batches are device-side
-   gathers inside the scan body;
+   gathers inside the scan body (tasks declare row-indexable
+   ``x_train`` / ``y_train`` — feature rows for supervised tasks, token
+   sequences for LM tasks);
 3. rounds between eval points run as one ``lax.scan`` — one XLA dispatch
    per eval interval instead of per round;
-4. params, state and the round schedule chunk are **donated** to the
-   chunk executable (``donate_argnums``), so the scan updates the model
-   in place instead of doubling HBM residency per chunk;
+4. params, state, compressor state and the round schedule chunk are
+   **donated** to the chunk executable (``donate_argnums``), so the scan
+   updates the model in place instead of doubling HBM residency per
+   chunk;
 5. with ``mesh=`` (a 1-D client mesh from
    :func:`repro.launch.mesh.make_client_mesh`) the round body runs under
    ``shard_map`` over the client axis: each device owns I/D clients,
@@ -26,14 +30,21 @@ loop:
    single-device one.  ``mesh=None`` (default) is the single-device
    fallback.
 
-Per round the body is:  gather (I, [E,] B) client batches → vmap
+There is exactly **one** scan-body builder (:func:`_chunk_fn`).  Per
+round the body is:  gather (I, [E,] B) client batches → vmap
 ``client_upload`` over clients → [compress per client, with the
-error-feedback residual threaded through the scan carry — see
-:mod:`repro.fed.compression`] → aggregate (plain / secure / sampled) →
-``server_step``.  Evaluation happens at chunk boundaries on the host,
-preserving the seed drivers' exact eval cadence (every ``eval_every``
-rounds and at the final round).  The exact wire bytes of every round are
-recorded in the :class:`History` ledger.
+error-feedback residual threaded through the structured scan carry —
+see :mod:`repro.fed.compression`] → aggregate (plain / secure /
+sampled) → ``server_step``.  The carry is :class:`RoundCarry`; the
+compressor-state slot is the empty pytree ``()`` when no compressor is
+set, so the uncompressed trace is numerically untouched (trajectories
+are bit-identical to the pre-unification engine — pinned by
+``tests/test_task_bitexact.py``).
+
+Evaluation happens at chunk boundaries on the host through the task's
+jitted metric probe (one compile per task, shared across runs),
+recording the task-declared metric schema into :class:`History`.  The
+exact wire bytes of every round are recorded in the ledger.
 """
 from __future__ import annotations
 
@@ -42,7 +53,7 @@ import dataclasses
 import functools
 import time
 import warnings
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,14 +64,21 @@ from repro.data.partition import Partition, sample_schedule
 from repro.fed import compression as compression_mod
 from repro.fed.aggregation import Aggregation, PlainAggregation
 from repro.launch import mesh as mesh_mod
-from repro.mlpapp import model as mlp
 
 PyTree = Any
+
+_LEGACY_METRICS = ("train_cost", "test_accuracy", "sparsity")
 
 
 @dataclasses.dataclass
 class History:
     """Per-eval-point diagnostics; the benchmarks turn these into figures.
+
+    ``metrics`` maps each **task-declared** metric name to its
+    per-eval-point series (aligned with ``rounds``).  The MLP task's
+    names — ``train_cost`` / ``test_accuracy`` / ``sparsity`` — are also
+    exposed as attribute views into the same lists for back-compat with
+    the seed-era callers; other tasks read ``metrics`` directly.
 
     The communication ledger lives here: ``uplink_bytes_per_round`` /
     ``downlink_bytes_per_round`` are the *exact* wire bytes of one round
@@ -70,9 +88,10 @@ class History:
     cumulative uplink at each eval point, aligned with ``rounds`` — the
     x-axis of the paper's accuracy-vs-communication comparison.
 
-    ``uplink_floats_per_round`` is **deprecated** (kept populated for one
-    release): it counts message elements assuming a dense float32 wire,
-    which is wrong under compression, int32 secure masking, or partial
+    ``uplink_floats_per_round`` is **deprecated** (reading it warns;
+    removal is scheduled for the release after next — see README):
+    it counts message elements assuming a dense float32 wire, which is
+    wrong under compression, int32 secure masking, or partial
     participation.  Use ``uplink_bytes_per_round``.
 
     Only the engine fills the ledger; histories from the legacy
@@ -80,56 +99,100 @@ class History:
     empty.
     """
     rounds: List[int] = dataclasses.field(default_factory=list)
-    train_cost: List[float] = dataclasses.field(default_factory=list)
-    test_accuracy: List[float] = dataclasses.field(default_factory=list)
-    sparsity: List[float] = dataclasses.field(default_factory=list)
+    metrics: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
     slack: List[float] = dataclasses.field(default_factory=list)
     cum_uplink_bytes: List[int] = dataclasses.field(default_factory=list)
     uplink_bytes_per_round: int = 0
     downlink_bytes_per_round: int = 0
     comm: Dict[str, Any] = dataclasses.field(default_factory=dict)
-    uplink_floats_per_round: int = 0        # deprecated — see docstring
     wall_seconds: float = 0.0
+    _uplink_floats: int = 0     # deprecated wire model — see docstring
+
+    def metric(self, name: str) -> List[float]:
+        """The (live, appendable) series for ``name`` — the *write*
+        accessor (:func:`record` uses it); inserts the series if absent."""
+        return self.metrics.setdefault(name, [])
+
+    # Back-compat read views of the MLP metric schema.  Reads must not
+    # mutate: a history for a task without e.g. "sparsity" would grow a
+    # spurious empty series (breaking metrics == task.metric_names and
+    # serialized schemas) if a logging helper merely touched the
+    # attribute — so an absent metric reads as a throwaway empty list.
+    @property
+    def train_cost(self) -> List[float]:
+        return self.metrics.get("train_cost", [])
+
+    @property
+    def test_accuracy(self) -> List[float]:
+        return self.metrics.get("test_accuracy", [])
+
+    @property
+    def sparsity(self) -> List[float]:
+        return self.metrics.get("sparsity", [])
+
+    @property
+    def uplink_floats_per_round(self) -> int:
+        warnings.warn(
+            "History.uplink_floats_per_round is deprecated (it assumes a "
+            "dense float32 wire); use uplink_bytes_per_round / the comm "
+            "breakdown. Scheduled for removal — see README.",
+            DeprecationWarning, stacklevel=2)
+        return self._uplink_floats
 
     def as_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = {"rounds": list(self.rounds),
+             "metrics": {k: list(v) for k, v in self.metrics.items()},
+             "slack": list(self.slack),
+             "cum_uplink_bytes": list(self.cum_uplink_bytes),
+             "uplink_bytes_per_round": self.uplink_bytes_per_round,
+             "downlink_bytes_per_round": self.downlink_bytes_per_round,
+             "comm": dict(self.comm),
+             "wall_seconds": self.wall_seconds,
+             "uplink_floats_per_round": self._uplink_floats}
+        # seed-era flat keys, kept for serialized-schema compatibility
+        for k in _LEGACY_METRICS:
+            d[k] = list(self.metrics.get(k, []))
+        return d
 
 
-# Module-level jit: one compiled probe per argument shape, shared by every
-# evaluator instance — per-run closures used to re-jit (and so re-compile)
-# the identical computation on every run of a multi-seed benchmark sweep.
-@jax.jit
-def _measure(params, x_tr, y_tr, x_te, y_te):
-    return (mlp.cross_entropy(params, (x_tr, y_tr)),
-            mlp.accuracy(params, x_te, y_te),
-            mlp.sparsity(params))
+# One compiled probe per *task* (not per run): tasks are frozen
+# dataclasses, so equal tasks share one executable across a multi-seed
+# benchmark sweep — per-run closures used to re-jit (and so re-compile)
+# the identical computation on every run.
+@functools.lru_cache(maxsize=32)
+def _measure_fn(task):
+    return jax.jit(task.measure)
 
 
-def evaluator(data, eval_samples: int, seed: int = 123):
-    """(cost, accuracy, sparsity) probe on a fixed eval subset.
+def evaluator(task, data, eval_samples: int, seed: int = 123):
+    """The task's metric probe on a fixed eval subset.
 
-    Eval data is passed as jit arguments to the module-level
-    :func:`_measure` (a closure would embed it as HLO constants and
-    trigger multi-second constant folding per compile — and a per-run jit
-    wrapper would recompile per run)."""
+    Returns ``measure(params) -> {metric_name: scalar}`` per the task's
+    declared ``metric_names``.  Eval data is passed as jit arguments to
+    the per-task cached probe (a closure would embed it as HLO constants
+    and trigger multi-second constant folding per compile — and a
+    per-run jit wrapper would recompile per run)."""
     rng = np.random.default_rng(seed)
     tr = rng.choice(len(data.x_train), size=min(eval_samples,
                                                 len(data.x_train)),
                     replace=False)
     xe_tr = jnp.asarray(data.x_train[tr]); ye_tr = jnp.asarray(data.y_train[tr])
     xe_te = jnp.asarray(data.x_test); ye_te = jnp.asarray(data.y_test)
+    probe = _measure_fn(task)
 
     def measure(params):
-        return _measure(params, xe_tr, ye_tr, xe_te, ye_te)
+        return probe(params, xe_tr, ye_tr, xe_te, ye_te)
     return measure
 
 
 def record(hist: History, t: int, measure, params, slack: float = 0.0):
-    cost, acc, sp = measure(params)
+    vals = measure(params)
+    if not isinstance(vals, dict):
+        # seed-era probes (the legacy drivers') return the MLP 3-tuple
+        vals = dict(zip(_LEGACY_METRICS, vals))
     hist.rounds.append(t)
-    hist.train_cost.append(float(cost))
-    hist.test_accuracy.append(float(acc))
-    hist.sparsity.append(float(sp))
+    for k, v in vals.items():
+        hist.metric(k).append(float(v))
     hist.slack.append(float(slack))
     if hist.uplink_bytes_per_round:
         # ledger-carrying histories (the engine's) get the cumulative
@@ -187,146 +250,69 @@ def build_schedule(part: Partition, batch_size: int, rounds: int,
         0, 2, 1, 3)
 
 
+class RoundCarry(NamedTuple):
+    """The structured scan carry of the (single) round body.
+
+    ``cstate`` is the optional compressor slot: per-client error-feedback
+    residuals with a leading client axis when a stateful compressor is
+    set, the empty pytree ``()`` otherwise — an empty slot adds no
+    arrays, so the uncompressed trace's numerics are untouched."""
+    params: PyTree
+    state: PyTree
+    cstate: PyTree
+
+
 @functools.lru_cache(maxsize=64)
 def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
               compressor=None, mesh=None):
-    """The jitted scan-over-rounds body, cached per (algorithm,
-    aggregation, compressor, mesh) tuple.
+    """The jitted scan-over-rounds body — the engine's *only* scan-body
+    builder — cached per (algorithm, aggregation, compressor, mesh).
 
     ``compressor=None`` (or the identity, normalized to ``None`` by
-    :func:`run`) traces the PR-2 body untouched — compressed and
-    uncompressed programs never share a trace, so the identity
-    trajectory stays bit-identical.  A real compressor routes to
-    :func:`_compressed_chunk_fn`, which materializes per-client messages
-    (compression is a per-client map — the linear super-batch shortcut
-    cannot apply) and threads the per-client compressor state through
-    the scan carry.
+    :func:`run`) keeps the compressor slot of the :class:`RoundCarry`
+    empty and skips the per-client compress stage entirely, so
+    compressed and uncompressed programs never share numerics-relevant
+    structure and the identity trajectory stays bit-identical.
 
-    All four are hashable (frozen dataclasses / ``jax.sharding.Mesh``)
-    and the data arrays are passed as arguments (not closed over), so
-    repeated ``run`` calls — the multi-seed benchmark loops — reuse one
-    compiled executable instead of re-tracing a fresh closure per run.
-    ``params``, ``state`` and the round-schedule chunk are donated: the
-    scan's carry update happens in place instead of holding both the old
-    and new model/state per chunk.
+    All four cache keys are hashable (frozen dataclasses /
+    ``jax.sharding.Mesh``) and the data arrays are passed as arguments
+    (not closed over), so repeated ``run`` calls — the multi-seed
+    benchmark loops — reuse one compiled executable instead of
+    re-tracing a fresh closure per run.  ``params``, ``state``,
+    ``cstate`` and the round-schedule chunk are donated: the scan's
+    carry update happens in place instead of holding both the old and
+    new model/state per chunk.
 
-    Three statically-selected round bodies:
+    One round body, three statically-selected upload paths:
 
-    * sum-combine × linear aggregation — the aggregate is evaluated
-      directly on the round-weighted super-batch (``client_upload`` is
-      additive in the batch, see :mod:`repro.core.protocol`).  One
-      gradient per round; per-client message tensors (I× model size of
-      HBM traffic) are never materialized.
-    * sum-combine × message-level aggregation (secure) — per-client
-      uploads computed under vmap with each client's λ'_i folded into its
-      per-sample weights, then combined by the strategy (masking).
-    * mean-combine (FedAvg) — per-client models under vmap, weighted by
-      λ'_i at the message level, then combined.
+    * sum-combine × linear aggregation × no compressor — the aggregate
+      is evaluated directly on the round-weighted super-batch
+      (``client_upload`` is additive in the batch, see
+      :mod:`repro.core.protocol`).  One gradient per round; per-client
+      message tensors (I× model size of HBM traffic) are never
+      materialized.
+    * sum-combine, messages materialized (secure aggregation and/or a
+      compressor) — per-client uploads computed under vmap with each
+      client's λ'_i folded into its per-sample weights, optionally
+      compressed per client (participation-gated, error-feedback
+      residual in the carry), then combined by the strategy.
+    * mean-combine (FedAvg) — per-client models under vmap; a compressor
+      compresses the *model delta* m_i − ω^t (top-k of an update is
+      sparsification; top-k of a raw model would discard it) and the
+      weighted message λ'_i(ω^t + Δ̂_i) is reassembled afterwards;
+      uncompressed messages are weighted directly.
 
-    Under a client mesh the same three bodies run per client *shard*
+    Under a client mesh the same bodies run per client *shard*
     (``shard_map`` over the mesh's first axis): round weights are
     computed identically on every device from the replicated full
-    ``weights`` and sliced to the local clients, uploads stay local, and
-    the aggregate is one ``psum`` — of the super-batch statistic (linear
-    strategies) or of the strategy's partial combine (secure: int32
-    masked fixed-point uploads, whose wraparound psum reproduces the
-    single-device Z_{2^32} aggregate bit-for-bit).
-    """
-    if compressor is not None:
-        return _compressed_chunk_fn(algorithm, aggregation, compressor,
-                                    mesh)
-    combine = algorithm.combine
-
-    def chunk(params, state, x_train, y_train, weights, key_data,
-              idx_chunk, ts, shard=None):
-        session_key = jax.random.wrap_key_data(key_data)
-        num_clients = weights.shape[0]
-
-        def one_round(carry, xs):
-            params, state = carry
-            idx_t, t = xs
-            key_t = jax.random.fold_in(session_key, t)
-            rw = aggregation.round_weights(weights, key_t, combine)
-            if shard is not None:
-                axis = shard
-                i_loc = idx_t.shape[0]
-                offset = jax.lax.axis_index(axis) * i_loc
-                rw = jax.lax.dynamic_slice(rw, (offset,), (i_loc,))
-            if combine == "sum" and not aggregation.needs_messages:
-                flat = idx_t.reshape(-1)                     # (I·B,)
-                n_per = idx_t.shape[-1]
-                batch = (x_train[flat], y_train[flat],
-                         jnp.repeat(rw, n_per))
-                agg = algorithm.client_upload(params, state, batch)
-                if shard is not None:
-                    agg = jax.lax.psum(agg, axis)
-                return algorithm.server_step(params, state, agg), None
-            if combine == "sum":
-                xb, yb = x_train[idx_t], y_train[idx_t]      # (I, B, ·)
-                ws = jnp.broadcast_to(rw[:, None], idx_t.shape)
-                msgs = jax.vmap(algorithm.client_upload,
-                                in_axes=(None, None, 0))(params, state,
-                                                         (xb, yb, ws))
-            else:                                            # mean: models
-                batch = (x_train[idx_t], y_train[idx_t])     # (I, E, B, ·)
-                raw = jax.vmap(algorithm.client_upload,
-                               in_axes=(None, None, 0))(params, state,
-                                                        batch)
-                msgs = jax.tree.map(
-                    lambda m: m * rw.reshape((-1,) + (1,) * (m.ndim - 1)),
-                    raw)
-            if shard is None:
-                agg = aggregation.combine_messages(msgs, key_t)
-            else:
-                partial = aggregation.partial_combine(
-                    msgs, key_t, offset, num_clients)
-                agg = aggregation.finalize_combine(
-                    jax.lax.psum(partial, axis))
-            return algorithm.server_step(params, state, agg), None
-
-        (params, state), _ = jax.lax.scan(one_round, (params, state),
-                                          (idx_chunk, ts))
-        return params, state
-
-    if mesh is None:
-        return jax.jit(chunk, donate_argnums=(0, 1, 6))
-
-    axis = mesh.axis_names[0]
-    spec = jax.sharding.PartitionSpec
-
-    def sharded_body(params, state, x_train, y_train, weights, key_data,
-                     idx_chunk, ts):
-        return chunk(params, state, x_train, y_train, weights, key_data,
-                     idx_chunk, ts, shard=axis)
-
-    fn = mesh_mod.shard_map_fn(
-        sharded_body, mesh,
-        in_specs=(spec(), spec(), spec(), spec(), spec(), spec(),
-                  spec(None, axis), spec()),
-        out_specs=(spec(), spec()))
-    return jax.jit(fn, donate_argnums=(0, 1, 6))
-
-
-def _compressed_chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
-                         compressor, mesh=None):
-    """The scan body under a non-identity compressor.
-
-    Per round: gather client batches → vmap ``client_upload`` (per-client
-    messages are always materialized — each client compresses its own
-    upload) → vmap ``compressor.compress`` with the per-client
-    error-feedback slot from the carry → participation gating → aggregate
-    → ``server_step``.  The carry is ``(params, state, cstate)`` where
-    ``cstate`` holds per-client compressor state with a leading client
-    axis; under a client mesh it is sharded over the client axis exactly
-    like the uploads (each device owns its clients' residuals).
-
-    Mean-combine algorithms compress the *model delta* m_i − ω^t (the
-    upload map the compression literature assumes: top-k of a raw model
-    would discard the model, top-k of its update is sparsification), and
-    the weighted message λ'_i(ω^t + Δ̂_i) is reassembled afterwards —
-    with the identity compressor this is algebraically the PR-2 path.
+    ``weights`` and sliced to the local clients, uploads (and residuals)
+    stay local, and the aggregate is one ``psum`` — of the super-batch
+    statistic (linear strategies) or of the strategy's partial combine
+    (secure: int32 masked fixed-point uploads, whose wraparound psum
+    reproduces the single-device Z_{2^32} aggregate bit-for-bit).
     """
     combine = algorithm.combine
+    compressed = compressor is not None
 
     def chunk(params, state, cstate, x_train, y_train, weights, key_data,
               idx_chunk, ts, shard=None):
@@ -343,8 +329,19 @@ def _compressed_chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
             if shard is not None:
                 offset = jax.lax.axis_index(shard) * i_loc
                 rw = jax.lax.dynamic_slice(rw, (offset,), (i_loc,))
-            cids = (jnp.asarray(offset).astype(jnp.uint32)
-                    + jnp.arange(i_loc, dtype=jnp.uint32))
+
+            if not compressed and combine == "sum" \
+                    and not aggregation.needs_messages:
+                # linear fast path: one upload on the weighted super-batch
+                flat = idx_t.reshape(-1)                     # (I·B,)
+                n_per = idx_t.shape[-1]
+                batch = (x_train[flat], y_train[flat],
+                         jnp.repeat(rw, n_per))
+                agg = algorithm.client_upload(params, state, batch)
+                if shard is not None:
+                    agg = jax.lax.psum(agg, shard)
+                params, state = algorithm.server_step(params, state, agg)
+                return RoundCarry(params, state, cstate), None
 
             if combine == "sum":
                 xb, yb = x_train[idx_t], y_train[idx_t]      # (I, B, ·)
@@ -352,36 +349,49 @@ def _compressed_chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                 raw = jax.vmap(algorithm.client_upload,
                                in_axes=(None, None, 0))(params, state,
                                                         (xb, yb, ws))
-            else:                                            # mean: deltas
+            else:                                            # mean: models
                 batch = (x_train[idx_t], y_train[idx_t])     # (I, E, B, ·)
                 models = jax.vmap(algorithm.client_upload,
                                   in_axes=(None, None, 0))(params, state,
                                                            batch)
-                raw = jax.tree.map(lambda m, p: m - p, models, params)
+                raw = models if not compressed else \
+                    jax.tree.map(lambda m, p: m - p, models, params)
 
-            kd = jax.random.key_data(key_t).reshape(-1).astype(jnp.uint32)
-            k0, k1 = kd[0], kd[-1]
-            comp, new_cstate = jax.vmap(
-                lambda m, r, c: compressor.compress(m, r, k0, k1, c)
-            )(raw, cstate, cids)
+            if compressed:
+                cids = (jnp.asarray(offset).astype(jnp.uint32)
+                        + jnp.arange(i_loc, dtype=jnp.uint32))
+                kd = jax.random.key_data(key_t).reshape(-1) \
+                    .astype(jnp.uint32)
+                k0, k1 = kd[0], kd[-1]
+                comp, new_cstate = jax.vmap(
+                    lambda m, r, c: compressor.compress(m, r, k0, k1, c)
+                )(raw, cstate, cids)
 
-            # participation gating: a zero-round-weight client (sampled
-            # out) uploads nothing and must not flush its residual
-            live = rw != 0
+                # participation gating: a zero-round-weight client
+                # (sampled out) uploads nothing, must not flush residual
+                live = rw != 0
 
-            def _sel(new, old):
-                m = live.reshape((-1,) + (1,) * (new.ndim - 1))
-                return jnp.where(m, new, old)
+                def _sel(new, old):
+                    m = live.reshape((-1,) + (1,) * (new.ndim - 1))
+                    return jnp.where(m, new, old)
 
-            comp = jax.tree.map(lambda c: _sel(c, jnp.zeros_like(c)), comp)
-            new_cstate = jax.tree.map(_sel, new_cstate, cstate)
-
-            if combine == "sum":
-                msgs = comp                                  # λ' in ws
+                comp = jax.tree.map(
+                    lambda c: _sel(c, jnp.zeros_like(c)), comp)
+                cstate = jax.tree.map(_sel, new_cstate, cstate)
+                if combine == "sum":
+                    msgs = comp                              # λ' in ws
+                else:
+                    msgs = jax.tree.map(
+                        lambda d, p: rw.reshape(
+                            (-1,) + (1,) * (d.ndim - 1)) * (p + d),
+                        comp, params)
+            elif combine == "sum":
+                msgs = raw                                   # λ' in ws
             else:
                 msgs = jax.tree.map(
-                    lambda d, p: rw.reshape((-1,) + (1,) * (d.ndim - 1))
-                    * (p + d), comp, params)
+                    lambda m: m * rw.reshape((-1,) + (1,) * (m.ndim - 1)),
+                    raw)
+
             if shard is None:
                 agg = aggregation.combine_messages(msgs, key_t)
             else:
@@ -390,11 +400,12 @@ def _compressed_chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                 agg = aggregation.finalize_combine(
                     jax.lax.psum(partial, shard))
             params, state = algorithm.server_step(params, state, agg)
-            return (params, state, new_cstate), None
+            return RoundCarry(params, state, cstate), None
 
-        (params, state, cstate), _ = jax.lax.scan(
-            one_round, (params, state, cstate), (idx_chunk, ts))
-        return params, state, cstate
+        carry, _ = jax.lax.scan(one_round,
+                                RoundCarry(params, state, cstate),
+                                (idx_chunk, ts))
+        return carry.params, carry.state, carry.cstate
 
     if mesh is None:
         return jax.jit(chunk, donate_argnums=(0, 1, 2, 7))
@@ -433,18 +444,23 @@ def _upload_avals(algorithm: FedAlgorithm, x_train, y_train,
     return jax.eval_shape(algorithm.client_upload, params, state, batch)
 
 
-def run(algorithm: FedAlgorithm, data, part: Partition, *,
-        batch_size: int, rounds: int, params: PyTree, seed: int = 0,
-        eval_every: int = 1, eval_samples: int = 10000,
+def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
+        batch_size: int, rounds: int, params: Optional[PyTree] = None,
+        seed: int = 0, eval_every: int = 1, eval_samples: int = 10000,
         aggregation: Optional[Aggregation] = None,
         compressor=None, mesh=None) -> tuple[PyTree, History]:
-    """Run ``algorithm`` for ``rounds`` rounds under ``aggregation``.
+    """Run ``algorithm`` on ``task`` for ``rounds`` rounds.
 
-    Returns the final parameters and the :class:`History` (same schema as
-    the seed drivers, plus the communication ledger).  ``seed`` controls
-    both the mini-batch schedule and the per-round aggregation /
-    compression key (client sampling / mask / stochastic-rounding
-    derivation).
+    ``task`` — a :class:`repro.fed.tasks.base.FedTask`; it supplies the
+    metric schema and the jitted eval probe (and, when ``params`` is
+    ``None``, the initial parameters).  ``data`` must match the task's
+    client-batch layout (``task.default_data(...)`` produces one).
+
+    Returns the final parameters and the :class:`History` (task metrics
+    plus the communication ledger).  ``seed`` controls the parameter
+    init (when ``params`` is ``None``), the mini-batch schedule and the
+    per-round aggregation / compression key (client sampling / mask /
+    stochastic-rounding derivation).
 
     ``compressor`` — a :mod:`repro.fed.compression` strategy applied to
     every client upload before aggregation (``None`` or
@@ -467,6 +483,8 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *,
             raise ValueError(
                 f"client mesh of {ndev} devices does not divide "
                 f"I={part.num_clients} clients")
+    if params is None:
+        params = task.init_params(jax.random.key(seed))
     schedule = build_schedule(part, batch_size, rounds,
                               algorithm.local_steps, seed,
                               e_axis=algorithm.combine == "mean")
@@ -482,15 +500,15 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *,
     # the donating executable (the caller may reuse them across runs)
     params = jax.tree.map(jnp.array, params)
     state = algorithm.init_state(params)
-    cstate = None
+    cstate: PyTree = ()
     if compressor is not None:
         cstate = compressor.init_client_state(
             _upload_avals(algorithm, x_train, y_train, batch_size, params),
             part.num_clients)
-    measure = evaluator(data, eval_samples)
+    measure = evaluator(task, data, eval_samples)
     ledger = compression_mod.round_bytes(algorithm, aggregation, compressor,
                                          params, part.num_clients)
-    hist = History(uplink_floats_per_round=algorithm.uplink_floats(params),
+    hist = History(_uplink_floats=algorithm.uplink_floats(params),
                    uplink_bytes_per_round=ledger.uplink_total,
                    downlink_bytes_per_round=ledger.downlink_total,
                    comm=ledger.as_dict())
@@ -508,14 +526,9 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *,
                 "ignore",
                 message=r"Some donated buffers were not usable: "
                         r"ShapedArray\(int32")
-            if compressor is None:
-                params, state = run_chunk(params, state, x_train, y_train,
-                                          weights, key_data,
-                                          idx_dev[done:done + n], ts)
-            else:
-                params, state, cstate = run_chunk(
-                    params, state, cstate, x_train, y_train, weights,
-                    key_data, idx_dev[done:done + n], ts)
+            params, state, cstate = run_chunk(
+                params, state, cstate, x_train, y_train, weights,
+                key_data, idx_dev[done:done + n], ts)
         done += n
         metrics = algorithm.round_metrics(state)
         record(hist, done, measure, params,

@@ -27,8 +27,18 @@ import numpy as np
 from repro.core import constrained, fedavg, ssca
 from repro.core.schedules import paper_schedules, sgd_learning_rate
 from repro.data.partition import Partition, sample_minibatches
-from repro.fed.engine import History, evaluator, record
+from repro.fed import engine
+from repro.fed.engine import History, record
+from repro.fed.tasks.mlp import MLPTask
 from repro.mlpapp import model as mlp
+
+
+def evaluator(data, eval_samples: int):
+    """MLP-task probe under the seed drivers' call signature (the engine's
+    evaluator is task-parametric; these drivers are MLP-only by design).
+    Metric dims only enter through the params, so the default task shares
+    the compiled probe with the runtime's MLP path."""
+    return engine.evaluator(MLPTask(), data, eval_samples)
 
 
 def _round_batch(data, part: Partition, batch_size: int, t: int, seed: int):
@@ -63,7 +73,7 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
 
     state = ssca.init(params)
     measure = evaluator(data, eval_samples)
-    hist = History(uplink_floats_per_round=sum(
+    hist = History(_uplink_floats=sum(
         int(np.prod(w.shape)) for w in jax.tree.leaves(params)))
     t0 = time.time()
     for t in range(1, rounds + 1):
@@ -89,7 +99,7 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
     one_round = jax.jit(constrained.round_fn(_weighted_ce_sum, limit_u, hp))
     state = constrained.init(params)
     measure = evaluator(data, eval_samples)
-    hist = History(uplink_floats_per_round=sum(
+    hist = History(_uplink_floats=sum(
         int(np.prod(w.shape)) for w in jax.tree.leaves(params)) + 1)
     t0 = time.time()
     for t in range(1, rounds + 1):
@@ -118,7 +128,7 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha))
     one_round = jax.jit(fedavg.fedsgd_round(loss, hp))
     measure = evaluator(data, eval_samples)
-    hist = History(uplink_floats_per_round=sum(
+    hist = History(_uplink_floats=sum(
         int(np.prod(w.shape)) for w in jax.tree.leaves(params)))
     t0 = time.time()
     for t in range(1, rounds + 1):
@@ -154,7 +164,7 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
     one_round = jax.jit(fedavg.fedavg_round(loss, hp))
     cw = jnp.asarray(part.sizes / part.total, jnp.float32)
     measure = evaluator(data, eval_samples)
-    hist = History(uplink_floats_per_round=sum(
+    hist = History(_uplink_floats=sum(
         int(np.prod(w.shape)) for w in jax.tree.leaves(params)))
     t0 = time.time()
     for t in range(1, rounds + 1):

@@ -1,20 +1,26 @@
 """Single-host federated simulation runtime (the paper's experimental rig).
 
-Simulates the server + I clients of Section II.  All four algorithms of
-Section VI are thin wrappers over the unified scan-chunked driver in
-:mod:`repro.fed.engine` — one :class:`repro.core.protocol.FedAlgorithm`
-instance each, composed with any :mod:`repro.fed.aggregation` strategy:
+Simulates the server + I clients of Section II for **any**
+:class:`repro.fed.tasks.base.FedTask` — the paper's MNIST MLP (the
+default, for back-compat with the seed-era call signatures), a reduced
+decoder-only LM, RWKV-6, or any user task.  All four algorithms of
+Section VI are thin wrappers over :func:`run`: each builds one
+:class:`repro.core.protocol.FedAlgorithm` from the *task's* loss and
+hands it to the unified scan-chunked driver in :mod:`repro.fed.engine`,
+composed with any :mod:`repro.fed.aggregation` strategy and any
+:mod:`repro.fed.compression` compressor:
 
 * Algorithm 1 (mini-batch SSCA, unconstrained)      — ``run_alg1``
 * Algorithm 2 (mini-batch SSCA, constrained)        — ``run_alg2``
 * FedSGD / SGD with E=1 [3],[4]                     — ``run_fedsgd``
 * FedAvg / parallel-restarted SGD with E>1 [3],[5]  — ``run_fedavg``
 
-Every runner accepts ``aggregation=`` (plain sum by default; see
-:func:`repro.fed.aggregation.secure` and
-:func:`repro.fed.aggregation.sampled`), so secure aggregation and partial
-client participation work for *all four* algorithms — including secure
-Algorithm 2, per the paper's §III-B.
+Every runner accepts ``task=`` (``None`` ⇒ the MLP task, with its
+hidden width taken from the legacy ``hidden=`` kwarg and input/label
+dims inferred from the data) plus ``aggregation=`` / ``compressor=`` /
+``mesh=``, so secure aggregation, partial participation, compressed
+uploads and client-mesh sharding work for all four algorithms × all
+tasks — including secure Algorithm 2, per the paper's §III-B.
 
 The mini-batch schedule is shared across algorithms (same seed ⇒ same
 sample draws) so convergence comparisons are paired.  The seed's
@@ -23,11 +29,7 @@ reference.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
-
-import jax
-import jax.numpy as jnp
 
 from repro.core import constrained, fedavg, protocol, ssca
 from repro.core.schedules import paper_schedules, sgd_learning_rate
@@ -37,20 +39,19 @@ from repro.fed import engine
 from repro.fed.engine import History  # noqa: F401  (public re-export)
 # Back-compat: the seed exposed these here; tests/benchmarks import them.
 from repro.fed.legacy import _round_batch, _weighted_ce_sum  # noqa: F401
-from repro.mlpapp import model as mlp
+from repro.fed.tasks.base import FedTask, LocalObjective, SumLoss
+from repro.fed.tasks.mlp import MLPTask
 
 _evaluator = engine.evaluator   # back-compat alias
 
 
-@functools.lru_cache(maxsize=None)
-def _fedavg_local_loss(lam: float):
-    """Per-λ local FedAvg objective, cached so equal ``run_fedavg`` calls
-    build identical (hashable-equal) algorithm instances — which lets the
-    engine reuse one compiled chunk across runs."""
-    def local_loss(p, batch):
-        reg = sum(jnp.vdot(w, w) for w in jax.tree.leaves(p)).real
-        return mlp.cross_entropy(p, batch) + lam * reg
-    return local_loss
+def _resolve_task(task: Optional[FedTask], data, hidden: int) -> FedTask:
+    """``task=None`` keeps the seed-era contract: the paper's MLP with
+    input/label widths read off the data and the ``hidden=`` kwarg."""
+    if task is not None:
+        return task
+    k, l = data.x_train.shape[1], data.y_train.shape[1]
+    return MLPTask(k=k, hidden=hidden, l=l)
 
 
 def _resolve_aggregation(aggregation, secure: bool):
@@ -62,22 +63,31 @@ def _resolve_aggregation(aggregation, secure: bool):
     return agg_mod.secure() if secure else aggregation
 
 
-def _init(data, seed: int, hidden: int, params):
-    k, l = data.x_train.shape[1], data.y_train.shape[1]
-    if params is None:
-        params = mlp.init_params(jax.random.key(seed), k, hidden, l)
-    return params
+def run(task: FedTask, algorithm: protocol.FedAlgorithm, data,
+        part: Partition, *, batch_size: int, rounds: int, params=None,
+        seed: int = 0, eval_every: int = 1, eval_samples: int = 10000,
+        aggregation: Optional[agg_mod.Aggregation] = None,
+        compressor=None, mesh=None) -> tuple:
+    """The generic task × algorithm entry all four wrappers reduce to.
+
+    ``params=None`` initializes from ``task.init_params(key(seed))``
+    (in :func:`engine.run`).
+    """
+    return engine.run(algorithm, data, part, task=task,
+                      batch_size=batch_size, rounds=rounds, params=params,
+                      seed=seed, eval_every=eval_every,
+                      eval_samples=eval_samples, aggregation=aggregation,
+                      compressor=compressor, mesh=mesh)
 
 
 def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
              lam: float = 1e-5, tau: float = 0.1, seed: int = 0,
-             params: Optional[mlp.MLPParams] = None,
+             params=None, task: Optional[FedTask] = None,
              hidden: int = 128, eval_every: int = 1,
              eval_samples: int = 10000, secure: bool = False,
              fused: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
-             compressor=None,
-             mesh=None) -> tuple[mlp.MLPParams, History]:
+             compressor=None, mesh=None) -> tuple:
     """Algorithm 1 on the eq.-(11) objective F(ω) + λ‖ω‖².
 
     ``secure=True`` is shorthand for ``aggregation=aggregation.secure()``
@@ -85,78 +95,80 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
     sees Σ_i q_i).  ``fused=True`` runs the server update through the
     Pallas fused kernel.
     """
-    params = _init(data, seed, hidden, params)
+    task = _resolve_task(task, data, hidden)
     rho, gamma = paper_schedules(batch_size)
     hp = ssca.SSCAHyperParams(tau=tau, lam=lam, rho=rho, gamma=gamma)
-    alg = protocol.SSCAUnconstrained(loss_fn=_weighted_ce_sum, hp=hp,
+    alg = protocol.SSCAUnconstrained(loss_fn=SumLoss(task), hp=hp,
                                      fused=fused)
     aggregation = _resolve_aggregation(aggregation, secure)
-    return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
-                      params=params, seed=seed, eval_every=eval_every,
-                      eval_samples=eval_samples, aggregation=aggregation,
-                      compressor=compressor, mesh=mesh)
+    return run(task, alg, data, part, batch_size=batch_size, rounds=rounds,
+               params=params, seed=seed, eval_every=eval_every,
+               eval_samples=eval_samples, aggregation=aggregation,
+               compressor=compressor, mesh=mesh)
 
 
 def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
              limit_u: float = 0.13, tau: float = 0.1, c: float = 1e5,
-             seed: int = 0, params: Optional[mlp.MLPParams] = None,
+             seed: int = 0, params=None, task: Optional[FedTask] = None,
              hidden: int = 128, eval_every: int = 1,
              eval_samples: int = 10000, secure: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
-             compressor=None,
-             mesh=None) -> tuple[mlp.MLPParams, History]:
+             compressor=None, mesh=None) -> tuple:
     """Algorithm 2 on eq. (18): min ‖ω‖² s.t. F(ω) ≤ U.
 
     ``secure=True`` masks the (value, gradient) upload q1 — the secure
     constrained variant the paper's §III-B requires."""
-    params = _init(data, seed, hidden, params)
+    task = _resolve_task(task, data, hidden)
     rho, gamma = paper_schedules(batch_size)
     hp = constrained.ConstrainedHyperParams(tau=tau, c=c, rho=rho,
                                             gamma=gamma)
-    alg = protocol.SSCAConstrained(cost_fn=_weighted_ce_sum,
+    alg = protocol.SSCAConstrained(cost_fn=SumLoss(task),
                                    limit_u=limit_u, hp=hp)
     aggregation = _resolve_aggregation(aggregation, secure)
-    return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
-                      params=params, seed=seed, eval_every=eval_every,
-                      eval_samples=eval_samples, aggregation=aggregation,
-                      compressor=compressor, mesh=mesh)
+    return run(task, alg, data, part, batch_size=batch_size, rounds=rounds,
+               params=params, seed=seed, eval_every=eval_every,
+               eval_samples=eval_samples, aggregation=aggregation,
+               compressor=compressor, mesh=mesh)
 
 
 def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
                lam: float = 1e-5, lr_a: float = 0.5, lr_alpha: float = 0.3,
-               seed: int = 0, params: Optional[mlp.MLPParams] = None,
+               seed: int = 0, params=None, task: Optional[FedTask] = None,
                hidden: int = 128, eval_every: int = 1,
                eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
-               compressor=None,
-               mesh=None) -> tuple[mlp.MLPParams, History]:
+               compressor=None, mesh=None) -> tuple:
     """E = 1 SGD baseline [3],[4] on the same objective as Algorithm 1."""
-    params = _init(data, seed, hidden, params)
+    task = _resolve_task(task, data, hidden)
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha))
-    alg = protocol.FedSGD(loss_fn=_weighted_ce_sum, hp=hp, lam=lam)
-    return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
-                      params=params, seed=seed, eval_every=eval_every,
-                      eval_samples=eval_samples, aggregation=aggregation,
-                      compressor=compressor, mesh=mesh)
+    alg = protocol.FedSGD(loss_fn=SumLoss(task), hp=hp, lam=lam)
+    return run(task, alg, data, part, batch_size=batch_size, rounds=rounds,
+               params=params, seed=seed, eval_every=eval_every,
+               eval_samples=eval_samples, aggregation=aggregation,
+               compressor=compressor, mesh=mesh)
 
 
 def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
                local_steps: int = 2, lam: float = 1e-5, lr_a: float = 0.5,
                lr_alpha: float = 0.3, seed: int = 0,
-               params: Optional[mlp.MLPParams] = None, hidden: int = 128,
-               eval_every: int = 1, eval_samples: int = 10000,
+               params=None, task: Optional[FedTask] = None,
+               hidden: int = 128, eval_every: int = 1,
+               eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
-               compressor=None,
-               mesh=None) -> tuple[mlp.MLPParams, History]:
+               compressor=None, mesh=None) -> tuple:
     """FedAvg [3] / PR-SGD [5]: E local steps per round, then model average.
 
     Per-client batches are (I, E, B) samples; aggregation weight N_i/N.
+    The local objective is the task's mean loss + λ‖ω‖²
+    (:class:`repro.fed.tasks.base.LocalObjective` — a frozen dataclass,
+    so equal ``run_fedavg`` calls build equal algorithm instances and
+    the engine reuses one compiled chunk across runs).
     """
-    params = _init(data, seed, hidden, params)
+    task = _resolve_task(task, data, hidden)
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha),
                                local_steps=local_steps)
-    alg = protocol.FedAvg(loss_fn=_fedavg_local_loss(lam), hp=hp)
-    return engine.run(alg, data, part, batch_size=batch_size, rounds=rounds,
-                      params=params, seed=seed, eval_every=eval_every,
-                      eval_samples=eval_samples, aggregation=aggregation,
-                      compressor=compressor, mesh=mesh)
+    alg = protocol.FedAvg(loss_fn=LocalObjective(task, lam), hp=hp)
+    return run(task, alg, data, part, batch_size=batch_size, rounds=rounds,
+               params=params, seed=seed, eval_every=eval_every,
+               eval_samples=eval_samples, aggregation=aggregation,
+               compressor=compressor, mesh=mesh)

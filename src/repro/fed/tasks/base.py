@@ -1,0 +1,110 @@
+"""The ``FedTask`` contract — what a model must provide to be trained
+federated.
+
+The paper's framework is model-agnostic: SSCA converges to KKT points
+for any smooth (possibly nonconvex) sample-wise objective, and the
+journal extension (arXiv:2104.06011) applies the same family of
+algorithms across model specifications.  This module encodes that as a
+structural interface, mirroring how :class:`repro.core.protocol.FedAlgorithm`
+abstracts the *algorithm* side:
+
+* ``init_params(key)`` — the model's parameter pytree.
+* ``loss_sum(params, (x, y, w))`` — the per-sample-weighted batch **sum**
+  Σ_n w_n ℓ_n(params; x_n, y_n).  Its gradient on the eq.-(2)-weighted
+  super-batch is exactly ĝ^t, and with w = λ_i·1 it is a single client's
+  secure upload — this is the ``loss_fn`` handed to the sum-combine
+  algorithm constructors in :mod:`repro.core.protocol`.  It must be
+  *additive in the batch* (a sum of per-sample terms) so the engine's
+  linear-aggregation super-batch shortcut stays valid.
+* ``mean_loss(params, (x, y))`` — the per-batch mean objective FedAvg's
+  local SGD descends (regularization is composed on top via
+  :class:`LocalObjective`).
+* ``metric_names`` / ``measure(params, x_tr, y_tr, x_te, y_te)`` — the
+  task-declared metric schema and its probe.  ``measure`` returns a dict
+  keyed by ``metric_names``; the engine jits it **once per task** (see
+  :func:`repro.fed.engine.evaluator` — tasks are frozen dataclasses, so
+  equal tasks share one compiled probe across a multi-seed sweep).
+* ``default_data(...)`` — a synthetic dataset in the engine's
+  client-batch layout: ``x_train[i]`` / ``y_train[i]`` index per-sample
+  rows, so per-round client batches are device-side gathers.  Supervised
+  tasks use (features, one-hot) pairs; LM tasks store token sequences in
+  both slots (the loss shifts internally).
+
+All callables must be jit/vmap/scan-compatible; tasks must be hashable
+and compare equal when constructed equal (the engine's compiled-chunk
+and probe caches key on them, via the algorithm dataclasses that hold
+their bound methods).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class TaskData(NamedTuple):
+    """Row-indexable dataset in the engine's gather layout."""
+    x_train: Any
+    y_train: Any
+    x_test: Any
+    y_test: Any
+
+
+@runtime_checkable
+class FedTask(Protocol):
+    """Structural model-side interface of the federated stack."""
+
+    name: str
+    metric_names: Tuple[str, ...]
+
+    def init_params(self, key) -> PyTree: ...
+
+    def loss_sum(self, params: PyTree, batch: Any) -> jnp.ndarray: ...
+
+    def mean_loss(self, params: PyTree, batch: Any) -> jnp.ndarray: ...
+
+    def measure(self, params: PyTree, x_tr, y_tr, x_te,
+                y_te) -> Dict[str, jnp.ndarray]: ...
+
+    def default_data(self, n_train: int, n_test: int,
+                     seed: int = 0) -> TaskData: ...
+
+
+def l2(params: PyTree) -> jnp.ndarray:
+    """‖params‖² over all leaves — the shared ridge regularizer."""
+    return sum(jnp.vdot(w, w) for w in jax.tree.leaves(params)).real
+
+
+@dataclasses.dataclass(frozen=True)
+class SumLoss:
+    """The task's ``loss_sum`` as an *equality-stable* callable.
+
+    A bound method compares its ``__self__`` by identity (CPython), so
+    ``task_a.loss_sum != task_b.loss_sum`` even for equal tasks — which
+    would defeat the engine's compiled-chunk cache (keyed on the
+    algorithm dataclass holding the loss).  Wrapping the task in a
+    frozen dataclass restores value equality: ``SumLoss(a) == SumLoss(b)``
+    whenever ``a == b``."""
+    task: Any
+
+    def __call__(self, params: PyTree, batch: Any) -> jnp.ndarray:
+        return self.task.loss_sum(params, batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalObjective:
+    """FedAvg's local objective: task mean loss + λ‖ω‖².
+
+    A frozen dataclass rather than a closure so that equal
+    ``(task, lam)`` pairs build *equal, hashable* loss callables — which
+    keeps the engine's compiled-chunk cache hitting across repeated
+    ``run_fedavg`` calls (a fresh closure per call would re-trace)."""
+    task: Any
+    lam: float
+
+    def __call__(self, params: PyTree, batch: Any) -> jnp.ndarray:
+        return self.task.mean_loss(params, batch) + self.lam * l2(params)

@@ -1,0 +1,58 @@
+"""The paper's Section-V MNIST MLP as a :class:`~repro.fed.tasks.base.FedTask`.
+
+This is the default task of every :mod:`repro.fed.runtime` wrapper and
+the numerical anchor of the stack: its loss/metric computations delegate
+to :mod:`repro.mlpapp.model` unchanged, so task-based runs are
+bit-identical to the pre-task engine (pinned by
+``tests/test_task_bitexact.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import synthetic
+from repro.fed.tasks.base import TaskData
+from repro.mlpapp import model as mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPTask:
+    """Three-layer swish/softmax classifier, eq. (9)/(10).
+
+    ``k``/``l`` are the input/label widths (inferred from the data by
+    the runtime wrappers), ``hidden`` the paper's J.  Metric dims only
+    enter through the params, so tasks differing solely in shape share
+    the measure code path.
+    """
+    k: int = 784
+    hidden: int = 128
+    l: int = 10
+
+    name = "mlp"
+    metric_names = ("train_cost", "test_accuracy", "sparsity")
+
+    def init_params(self, key) -> mlp.MLPParams:
+        return mlp.init_params(key, self.k, self.hidden, self.l)
+
+    def loss_sum(self, params, batch) -> jnp.ndarray:
+        """Σ_n w_n · ce_n — grad = ĝ^t of eq. (2) with exact paper weights."""
+        x, y, w = batch
+        logp = jax.nn.log_softmax(mlp.logits(params, x), axis=-1)
+        return -jnp.sum(w * jnp.sum(y * logp, axis=-1))
+
+    def mean_loss(self, params, batch) -> jnp.ndarray:
+        return mlp.cross_entropy(params, batch)
+
+    def measure(self, params, x_tr, y_tr, x_te, y_te):
+        return {"train_cost": mlp.cross_entropy(params, (x_tr, y_tr)),
+                "test_accuracy": mlp.accuracy(params, x_te, y_te),
+                "sparsity": mlp.sparsity(params)}
+
+    def default_data(self, n_train: int = 60000, n_test: int = 10000,
+                     seed: int = 0) -> TaskData:
+        d = synthetic.classification_dataset(n_train=n_train, n_test=n_test,
+                                             k=self.k, l=self.l, seed=seed)
+        return TaskData(d.x_train, d.y_train, d.x_test, d.y_test)

@@ -1,0 +1,22 @@
+"""RWKV-6 (attention-free SSM family) as a federated task.
+
+Same LM machinery as :mod:`repro.fed.tasks.transformer`, different model
+family: the forward pass is the RWKV-6 time-mix/channel-mix recurrence
+(:mod:`repro.models.rwkv6`), so this task exercises the engine with a
+model whose client upload pytree (stacked per-layer mix vectors, decay
+LoRAs, wkv projections) looks nothing like either the MLP or the GQA
+decoder — the shape-genericity check for the FedTask abstraction.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.fed.tasks.transformer import LMTask
+
+
+def rwkv6_task(*, layers: int = 2, d_model: int = 64, d_ff: int = 128,
+               vocab: int = 128, seq_len: int = 32) -> LMTask:
+    """A reduced RWKV-6 next-token task sized for CPU federated rounds."""
+    cfg = reduced(get_config("rwkv6-7b"), layers=layers, d_model=d_model,
+                  d_ff=d_ff, vocab=vocab)
+    return LMTask(cfg=cfg, seq_len=seq_len)

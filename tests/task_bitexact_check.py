@@ -1,0 +1,112 @@
+"""Bit-exactness harness for the engine's MLP-task trajectories.
+
+The FedTask refactor (PR 4) unified the engine's two scan-body builders
+and made the metric probe task-generic; this harness pins the MLP task's
+plain / secure / sampled / compressed trajectories to reference values
+captured from the pre-refactor engine, so chunk-builder or probe changes
+cannot silently move numerics.  Values are stored as ``float.hex()`` —
+the comparison is exact, not approximate.
+
+Two sections, mirroring how the tests execute them:
+
+* ``single`` — single-device runs, executed in-process by
+  ``tests/test_task_bitexact.py``.
+* ``mesh2``  — the same configurations on a 2-virtual-device client
+  mesh, executed here as a subprocess (the host-platform device-count
+  override must be set before jax initializes).
+
+Regenerate (only when a numerics change is *intended* — say so in the
+commit message)::
+
+    python tests/task_bitexact_check.py --write
+    python tests/task_bitexact_check.py --write --mesh
+
+Verify::
+
+    python tests/task_bitexact_check.py [--mesh]
+"""
+import json
+import os
+import sys
+from pathlib import Path
+
+MESH = "--mesh" in sys.argv
+WRITE = "--write" in sys.argv
+
+if MESH:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+REF_PATH = Path(__file__).resolve().parent / "data" / "mlp_reference.json"
+
+KW = dict(batch_size=10, rounds=6, eval_every=2, eval_samples=300, seed=3)
+
+
+def cases():
+    from repro.fed import aggregation, compression, runtime
+    return [
+        ("alg1/plain", runtime.run_alg1, {}),
+        ("alg1/secure", runtime.run_alg1, {"secure": True}),
+        ("alg1/sampled4", runtime.run_alg1,
+         {"aggregation": aggregation.sampled(4)}),
+        ("alg1/qsgd8", runtime.run_alg1,
+         {"compressor": compression.qsgd(8)}),
+        ("alg1/topk2_8b_secure", runtime.run_alg1,
+         {"compressor": compression.topk(0.2, bits=8), "secure": True}),
+        ("fedavg2/plain", runtime.run_fedavg,
+         {"local_steps": 2, "lr_a": 2.0}),
+        ("fedavg2/topk3", runtime.run_fedavg,
+         {"local_steps": 2, "lr_a": 2.0,
+          "compressor": compression.topk(0.3)}),
+    ]
+
+
+def run_section(mesh):
+    from repro.data import partition, synthetic
+    data = synthetic.classification_dataset(n_train=2000, n_test=500, seed=0)
+    part = partition.iid(2000, 10, seed=0)
+    out = {}
+    for name, fn, extra in cases():
+        _, h = fn(data, part, mesh=mesh, **KW, **extra)
+        out[name] = {
+            "rounds": list(h.rounds),
+            "train_cost": [float.hex(float(c)) for c in h.train_cost],
+            "test_accuracy": [float.hex(float(a)) for a in h.test_accuracy],
+        }
+    return out
+
+
+def compare(got, want, section):
+    for name, ref in want.items():
+        g = got[name]
+        assert g["rounds"] == ref["rounds"], (section, name, "rounds")
+        for key in ("train_cost", "test_accuracy"):
+            assert g[key] == ref[key], (
+                f"{section}/{name}: {key} drifted from the pre-refactor "
+                f"reference\n  got  {g[key]}\n  want {ref[key]}")
+
+
+def main():
+    section = "mesh2" if MESH else "single"
+    mesh = None
+    if MESH:
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh(2)
+    got = run_section(mesh)
+    if WRITE:
+        REF_PATH.parent.mkdir(parents=True, exist_ok=True)
+        ref = json.loads(REF_PATH.read_text()) if REF_PATH.exists() else {}
+        ref[section] = got
+        REF_PATH.write_text(json.dumps(ref, indent=1) + "\n")
+        print(f"wrote {section} -> {REF_PATH}")
+        return
+    ref = json.loads(REF_PATH.read_text())
+    compare(got, ref[section], section)
+    print("BITEXACT_CHECK_OK")
+
+
+if __name__ == "__main__":
+    main()

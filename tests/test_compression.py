@@ -267,9 +267,12 @@ def test_history_ledger_populated(dataset, fed_partition):
     np.testing.assert_array_equal(
         h.cum_uplink_bytes,
         [r * h.uplink_bytes_per_round for r in h.rounds])
-    # deprecated field still populated (float32-dense element count)
-    assert h.uplink_floats_per_round == h.comm["breakdown"][
-        "upload_elements"]
+    # deprecated field: still populated (float32-dense element count),
+    # but reading it now warns ahead of removal
+    with pytest.warns(DeprecationWarning, match="uplink_bytes_per_round"):
+        floats = h.uplink_floats_per_round
+    assert floats == h.comm["breakdown"]["upload_elements"]
+    assert h.as_dict()["uplink_floats_per_round"] == floats  # no warn path
 
 
 def test_construction_validation():

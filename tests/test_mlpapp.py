@@ -114,7 +114,7 @@ class TestFederatedRuns:
                                       eval_samples=1000, lr_a=2.0,
                                       lr_alpha=0.3)
         assert h_ssca.train_cost[-1] < h_sgd.train_cost[-1]
-        assert h_ssca.uplink_floats_per_round == h_sgd.uplink_floats_per_round
+        assert h_ssca.uplink_bytes_per_round == h_sgd.uplink_bytes_per_round
 
     def test_larger_batch_converges_faster(self, dataset, fed_partition):
         """Claim (ii)."""

@@ -101,6 +101,39 @@ class TestPartitionInvariants:
         all_idx = np.concatenate(part.indices)
         assert len(np.unique(all_idx)) == n
 
+    @given(i=st.integers(2, 24), alpha=st.floats(0.005, 5.0),
+           min_size=st.integers(1, 4), seed=st.integers(0, 2**16))
+    @settings(max_examples=40, deadline=None)
+    def test_dirichlet_no_empty_clients(self, i, alpha, min_size, seed):
+        """The empty-client guard: at any (num_clients, alpha) — including
+        the tiny-alpha regime where raw Dirichlet proportions starve
+        clients — every client ends with >= min_size samples, the split
+        stays a disjoint cover, and the batch sampler's padded-index path
+        is well-defined (no zero-length pools)."""
+        n = 200
+        rng = np.random.default_rng(seed)
+        labels = rng.integers(0, 10, size=n)
+        part = partition.dirichlet(labels, i, alpha=alpha, seed=seed,
+                                   min_size=min_size)
+        assert part.num_clients == i
+        assert int(part.sizes.min()) >= min_size
+        all_idx = np.concatenate(part.indices)
+        assert len(all_idx) == n and len(np.unique(all_idx)) == n
+        # the downstream contract the guard protects: every client can
+        # produce a mini-batch
+        mb = partition.sample_minibatches(part, 4, 1, seed=seed)
+        for ci in range(i):
+            assert np.isin(mb[ci], part.indices[ci]).all()
+
+    def test_dirichlet_quota_violations_refused(self):
+        labels = np.zeros(10, np.int64)
+        with pytest.raises(ValueError, match="min_size"):
+            partition.dirichlet(labels, 2, min_size=0)
+        with pytest.raises(ValueError, match="cannot give"):
+            partition.dirichlet(labels, 4, min_size=3)
+        with pytest.raises(ValueError, match="max_draws"):
+            partition.dirichlet(labels, 2, max_draws=0)
+
     @given(n=st.integers(100, 1000), i=st.integers(2, 8),
            b=st.integers(1, 32), seed=st.integers(0, 2**16))
     @settings(**SETTINGS)

@@ -7,7 +7,10 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
 
+
+@pytest.mark.slow
 def test_sharded_engine_matches_single_device():
     script = Path(__file__).parent / "sharded_engine_check.py"
     out = subprocess.run(

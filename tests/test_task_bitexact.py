@@ -1,0 +1,34 @@
+"""Regression: the refactored engine's MLP trajectories are bit-identical
+to the pre-refactor reference (tests/data/mlp_reference.json).
+
+The FedTask refactor unified the engine's compressed/uncompressed scan
+bodies and swapped the hard-coded MLP probe for the task-generic one;
+these tests pin plain / secure / sampled / compressed trajectories —
+single-device and on a 2-virtual-device client mesh — to values captured
+from the pre-refactor engine, compared via ``float.hex()`` (exact, not
+approximate).  See ``tests/task_bitexact_check.py`` for the case list
+and the (deliberate) regeneration procedure.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPT = Path(__file__).parent / "task_bitexact_check.py"
+
+
+def _run(args):
+    out = subprocess.run([sys.executable, str(SCRIPT), *args],
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "BITEXACT_CHECK_OK" in out.stdout
+
+
+def test_mlp_trajectories_bitexact_single_device():
+    _run([])
+
+
+@pytest.mark.slow
+def test_mlp_trajectories_bitexact_client_mesh():
+    _run(["--mesh"])

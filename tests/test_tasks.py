@@ -1,0 +1,139 @@
+"""The FedTask abstraction: non-MLP tasks through the full federated
+stack, task-declared metric schemas, and the engine's task-genericity
+contracts (cache-friendly task equality, MLP default back-compat).
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import protocol, ssca
+from repro.core.schedules import paper_schedules
+from repro.data import partition
+from repro.fed import aggregation, compression, engine, runtime
+from repro.fed.tasks import MLPTask, rwkv6_task, transformer_task
+from repro.fed.tasks.base import FedTask, LocalObjective, SumLoss
+
+
+def _tiny(factory):
+    return factory(seq_len=16, d_model=32, vocab=64)
+
+
+TASKS = [("transformer", lambda: _tiny(transformer_task)),
+         ("rwkv6", lambda: _tiny(rwkv6_task))]
+
+
+@pytest.mark.parametrize("name,factory", TASKS, ids=[t[0] for t in TASKS])
+def test_lm_task_end_to_end_secure_compressed(name, factory):
+    """A non-MLP task through engine.run: SSCA rounds composed with
+    secure aggregation and qsgd uploads, metrics recorded under the
+    task's declared schema, ledger filled."""
+    task = factory()
+    assert isinstance(task, FedTask)
+    data = task.default_data(n_train=96, n_test=24, seed=0)
+    part = partition.iid(96, 4, seed=0)
+    _, h = runtime.run_alg1(data, part, task=task, batch_size=4, rounds=4,
+                            eval_every=2, eval_samples=48, seed=1, tau=2.0,
+                            secure=True, compressor=compression.qsgd(8))
+    assert set(h.metrics) == set(task.metric_names)
+    assert h.rounds == [2, 4]
+    for series in h.metrics.values():
+        assert len(series) == 2 and np.isfinite(series).all()
+    assert h.uplink_bytes_per_round > 0
+    assert h.comm["breakdown"]["compressor"] == "qsgd"
+    # secure wire: dense int32 ring + per-peer seed share
+    assert h.comm["breakdown"]["wire_overhead_bytes"] > 0
+
+
+def test_lm_task_fedavg_with_error_feedback():
+    """Mean-combine (FedAvg) path for an LM task: local SGD on the
+    task's LocalObjective, top-k delta compression with per-client
+    residuals in the carry."""
+    task = _tiny(transformer_task)
+    data = task.default_data(n_train=64, n_test=16, seed=0)
+    part = partition.iid(64, 4, seed=0)
+    _, h = runtime.run_fedavg(data, part, task=task, batch_size=4,
+                              rounds=3, local_steps=2, lr_a=0.5,
+                              eval_every=3, eval_samples=32,
+                              compressor=compression.topk(0.3))
+    assert np.isfinite(h.metrics["train_cost"]).all()
+    assert set(h.metrics) == set(task.metric_names)
+
+
+def test_lm_task_sampled_participation():
+    task = _tiny(rwkv6_task)
+    data = task.default_data(n_train=64, n_test=16, seed=0)
+    part = partition.iid(64, 4, seed=0)
+    _, h = runtime.run_fedsgd(data, part, task=task, batch_size=4,
+                              rounds=3, lr_a=0.5, eval_every=3,
+                              eval_samples=32,
+                              aggregation=aggregation.sampled(2))
+    assert np.isfinite(h.metrics["train_cost"]).all()
+
+
+def test_task_equality_keeps_engine_caches_warm():
+    """Equal task constructions must produce equal, hashable loss
+    callables and algorithm cache keys — the engine's compiled-chunk and
+    probe caches key on them.  (Raw bound methods would NOT satisfy
+    this: CPython compares ``__self__`` by identity, hence the
+    SumLoss/LocalObjective wrappers.)"""
+    a, b = _tiny(transformer_task), _tiny(transformer_task)
+    assert a is not b
+    assert a == b and hash(a) == hash(b)
+    assert SumLoss(a) == SumLoss(b)
+    assert hash(SumLoss(a)) == hash(SumLoss(b))
+    assert LocalObjective(a, 1e-5) == LocalObjective(b, 1e-5)
+    assert engine._measure_fn(a) is engine._measure_fn(b)
+    rho, gamma = paper_schedules(4)
+    hp = ssca.SSCAHyperParams(tau=2.0, lam=0.0, rho=rho, gamma=gamma)
+    alg1 = protocol.SSCAUnconstrained(loss_fn=SumLoss(a), hp=hp)
+    alg2 = protocol.SSCAUnconstrained(loss_fn=SumLoss(b), hp=hp)
+    assert alg1 == alg2 and hash(alg1) == hash(alg2)
+    m1, m2 = MLPTask(k=12, hidden=4, l=3), MLPTask(k=12, hidden=4, l=3)
+    assert m1 == m2 and SumLoss(m1) == SumLoss(m2)
+
+
+def test_default_task_matches_explicit_mlp_task(dataset, fed_partition):
+    """task=None (seed-era signature) is exactly MLPTask(data dims)."""
+    kw = dict(batch_size=10, rounds=3, eval_every=3, eval_samples=200,
+              seed=5)
+    _, h_default = runtime.run_alg1(dataset, fed_partition, **kw)
+    _, h_task = runtime.run_alg1(
+        dataset, fed_partition,
+        task=MLPTask(k=dataset.x_train.shape[1], hidden=128,
+                     l=dataset.y_train.shape[1]), **kw)
+    np.testing.assert_array_equal(h_default.train_cost, h_task.train_cost)
+    np.testing.assert_array_equal(h_default.test_accuracy,
+                                  h_task.test_accuracy)
+
+
+def test_history_metric_views_alias_metrics_dict():
+    h = engine.History()
+    h.metric("train_cost").append(1.0)       # the write accessor inserts
+    assert h.metrics["train_cost"] == [1.0]
+    assert h.train_cost is h.metrics["train_cost"]
+    d = h.as_dict()
+    assert d["train_cost"] == [1.0] and d["metrics"]["train_cost"] == [1.0]
+    # reads of absent metrics must NOT pollute the task's schema
+    assert h.sparsity == [] and h.test_accuracy == []
+    assert set(h.metrics) == {"train_cost"}
+
+
+def test_uplink_floats_read_warns():
+    h = engine.History(_uplink_floats=7)
+    with pytest.warns(DeprecationWarning, match="uplink_bytes_per_round"):
+        assert h.uplink_floats_per_round == 7
+
+
+@pytest.mark.slow
+def test_lm_tasks_on_client_mesh_match_single_device():
+    """Two non-MLP tasks × secure aggregation × qsgd × 2-device client
+    mesh == single-device, bit for bit (subprocess: the virtual-device
+    override must precede jax init)."""
+    script = Path(__file__).parent / "task_mesh_check.py"
+    out = subprocess.run([sys.executable, str(script)],
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "TASK_MESH_CHECK_OK" in out.stdout
