@@ -27,6 +27,15 @@ RWKV-6 — through real federated rounds on the client mesh composed
 with secure aggregation + qsgd-compressed uploads, recording the
 task-declared metric schema and its ledger row.
 
+Schema v4 adds the **population-scaling section** (the cohort-native
+engine): with the cohort fixed at S=8, the client population I is swept
+over {100, 1k, 10k} ({100, 1k} in smoke) for the MLP and transformer
+tasks, recording round wall-clock and the resident index-schedule bytes
+((T, S) cohorts + (T, S, B) batches).  The acceptance target —
+``derived.population_round_ratio`` ≈ 1, i.e. round time at I=10_000
+within 2× of I=100 — is what "per-round cost is O(S), not O(I)" means
+operationally.
+
     PYTHONPATH=src python benchmarks/bench_all.py [--smoke]
 
 Sharded configs run on virtual host devices
@@ -191,6 +200,57 @@ def main(argv=None):
               f"{h.wall_seconds / task_rounds * 1e6:.1f},"
               f"final_cost={h.metrics['train_cost'][-1]:.4f}")
 
+    # -- population scaling: S fixed, I swept (the cohort-native engine's
+    # acceptance scenario: round cost tracks the cohort, not the
+    # population; index memory is O(T·S·B))
+    from repro.fed import engine as engine_mod
+    pop_cohort = 8
+    pop_is = [100, 1000] if args.smoke else [100, 1000, 10000]
+    population = []
+
+    def pop_row(task_name, tdata, tpart, i_pop, rounds_p, bsz, run_kw):
+        runtime.run_alg1(tdata, tpart, **run_kw)     # compile + stage
+        best, h = None, None
+        for _ in range(2):
+            _, h = runtime.run_alg1(tdata, tpart, **run_kw)
+            best = h.wall_seconds if best is None \
+                else min(best, h.wall_seconds)
+        cohorts_a, idx_a = engine_mod.build_schedule(
+            tpart, bsz, rounds_p, 1, 0, cohort_size=pop_cohort)
+        row = {"name": f"alg1/{task_name}/sampled{pop_cohort}/I{i_pop}",
+               "task": task_name, "population": i_pop,
+               "cohort": pop_cohort, "rounds": rounds_p,
+               "batch_size": bsz,
+               "wall_s": round(best, 4),
+               "round_ms": round(best / rounds_p * 1e3, 4),
+               "index_bytes": int(cohorts_a.nbytes + idx_a.nbytes),
+               "uplink_bytes_per_round": h.uplink_bytes_per_round}
+        population.append(row)
+        print(f"bench_all/{row['name']},"
+              f"{best / rounds_p * 1e6:.1f},"
+              f"index_bytes={row['index_bytes']}")
+
+    pop_rounds = rounds
+    for i_pop in pop_is:
+        ppart = partition.iid(n_train, i_pop, seed=0)
+        pop_row("mlp", data, ppart, i_pop, pop_rounds, args.batch_size,
+                dict(batch_size=args.batch_size, rounds=pop_rounds,
+                     eval_every=pop_rounds, eval_samples=500,
+                     hidden=models[0][1], seed=0,
+                     aggregation=aggregation.sampled(pop_cohort)))
+    from repro.fed.tasks import transformer_task
+    ttask = transformer_task(seq_len=16, d_model=32, vocab=64)
+    tn = max(pop_is)
+    tdata = ttask.default_data(n_train=tn, n_test=64, seed=0)
+    t_rounds = 3 if args.smoke else 8
+    for i_pop in pop_is:
+        tpart = partition.iid(tn, i_pop, seed=0)
+        pop_row(ttask.name, tdata, tpart, i_pop, t_rounds, 2,
+                dict(batch_size=2, rounds=t_rounds, eval_every=t_rounds,
+                     eval_samples=64, seed=0, tau=2.0, lam=0.0,
+                     task=ttask,
+                     aggregation=aggregation.sampled(pop_cohort)))
+
     def round_ms(name):
         return {c["name"]: c["round_ms"] for c in configs}[name]
 
@@ -214,13 +274,24 @@ def main(argv=None):
     derived["comm_target"] = ">= 4x fewer uplink bytes than dense for " \
         "8-bit / top-k plain uploads at <= 2% accuracy loss"
 
-    out = {"schema": "bench_engine/v3",
+    derived["population_round_ratio"] = {}
+    for tname in {r["task"] for r in population}:
+        ms = {r["population"]: r["round_ms"] for r in population
+              if r["task"] == tname}
+        derived["population_round_ratio"][tname] = round(
+            ms[max(ms)] / ms[min(ms)], 2)
+    derived["population_target"] = \
+        f"round wall-clock at I={max(pop_is)} within 2x of " \
+        f"I={min(pop_is)} at S={pop_cohort} (O(S) rounds)"
+
+    out = {"schema": "bench_engine/v4",
            "jax": jax.__version__,
            "backend": jax.default_backend(),
            "host_devices": jax.device_count(),
            "smoke": bool(args.smoke),
            "clients": args.clients, "batch_size": args.batch_size,
            "configs": configs, "tasks": task_rows,
+           "population": population,
            "comm_curves": comm_curves,
            "derived": derived}
     Path(args.out).write_text(json.dumps(out, indent=1) + "\n")

@@ -102,8 +102,6 @@ class FedAlgorithm(Protocol):
 
     def upload_spec(self, params: PyTree) -> UploadSpec: ...
 
-    def uplink_floats(self, params: PyTree) -> int: ...
-
 
 def _param_count(params: PyTree) -> int:
     return sum(int(np.prod(w.shape)) for w in jax.tree.leaves(params))
@@ -128,12 +126,6 @@ class _Base:
             elements=_param_count(params),
             leaves=len(jax.tree.leaves(params)),
             elem_bytes=jnp.dtype(self.upload_dtype).itemsize)
-
-    def uplink_floats(self, params) -> int:
-        """Deprecated: element count only — assumes a float32 wire.  Use
-        :meth:`upload_spec` (and ``History.uplink_bytes_per_round``) for
-        dtype- and sparsity-aware accounting; kept for one release."""
-        return self.upload_spec(params).elements
 
 
 class CounterState(NamedTuple):

@@ -3,25 +3,79 @@ paper's horizontal/sample-based setting, Section II).
 
 Partitions are disjoint, cover all of N, and record N_i so that the
 aggregation weights N_i/(B·N) of eqs. (2)/(7) are exact.
+
+The partition is stored as a **packed flat arena** — one contiguous
+index array plus per-client offsets/sizes — rather than a per-client
+``List[np.ndarray]``.  At the population scales the cohort-native engine
+targets (I in the tens of thousands, see :mod:`repro.fed.engine`), a
+Python list of I arrays costs I object headers and I pointer chases per
+pass; the arena is three arrays regardless of I, and every consumer
+(padding, batch draws, weight computation) is a vectorized slice of it.
+
+Per-round *cohorts* — the S participating clients of partial-
+participation rounds — are drawn host-side by :func:`sample_cohorts` and
+folded into the batch schedule by :func:`sample_schedule`'s ``cohorts=``
+argument, so the engine's scan only ever sees ``(T, S, B)`` indices: the
+full-population ``(T, I, B)`` tensor is never materialized when S < I.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple
+from typing import List, NamedTuple, Sequence
 
 import numpy as np
 
+# Sub-stream tag separating the per-round cohort draw from the per-round
+# batch draw (both are keyed on (seed, t)); any fixed word works, it just
+# must differ from the batch stream's bare [seed, t] entropy.
+_COHORT_STREAM = 0xC0407
+
+# Per-round transient budget of the batch draw, in elements: the
+# (block, width) key/pad matrices of sample_schedule hold at most this
+# many entries per array, whatever the partition's skew (~4 MB of f32
+# keys plus a few int64 temps of the same shape).
+_BLOCK_ELEMS = 1 << 20
+
 
 class Partition(NamedTuple):
-    indices: List[np.ndarray]   # per-client sample indices, disjoint
-    sizes: np.ndarray           # N_i, (I,)
+    """Packed per-client sample indices: the flat arena layout.
+
+    ``flat`` holds every client's sample indices back to back;
+    client i owns ``flat[offsets[i] : offsets[i] + sizes[i]]``.  Client
+    runs are disjoint and cover the dataset.  Construct with
+    :meth:`from_indices` (or the partitioner functions below) — the
+    ``indices`` property recovers the per-client view as zero-copy
+    slices for callers that iterate clients.
+    """
+    flat: np.ndarray      # (N,) packed sample indices, client runs
+    offsets: np.ndarray   # (I,) start of client i's run in ``flat``
+    sizes: np.ndarray     # (I,) N_i
+
+    @classmethod
+    def from_indices(cls, indices: Sequence[np.ndarray]) -> "Partition":
+        """Pack a per-client index list into the arena (order preserved
+        per client — the batch draw is keyed on within-client position,
+        so packing must not reorder)."""
+        sizes = np.asarray([len(ix) for ix in indices], np.int64)
+        offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        flat = (np.concatenate([np.asarray(ix, np.int64) for ix in indices])
+                if len(indices) else np.empty((0,), np.int64))
+        return cls(flat, offsets.astype(np.int64), sizes)
 
     @property
     def num_clients(self) -> int:
-        return len(self.indices)
+        return len(self.sizes)
 
     @property
     def total(self) -> int:
         return int(self.sizes.sum())
+
+    @property
+    def indices(self) -> List[np.ndarray]:
+        """Per-client zero-copy views into the arena (compat accessor —
+        O(I) Python objects; population-scale code should slice
+        ``flat``/``offsets``/``sizes`` directly)."""
+        return [self.flat[o:o + s]
+                for o, s in zip(self.offsets, self.sizes)]
 
     def weights(self, batch_size: int) -> np.ndarray:
         """N_i / (B·N) of eq. (2)."""
@@ -31,9 +85,11 @@ class Partition(NamedTuple):
 def iid(n: int, num_clients: int, seed: int = 0) -> Partition:
     rng = np.random.default_rng(seed)
     perm = rng.permutation(n)
-    chunks = np.array_split(perm, num_clients)
-    return Partition([c.copy() for c in chunks],
-                     np.asarray([len(c) for c in chunks], np.int64))
+    # array_split sizing: the first n % I clients get one extra sample
+    sizes = np.full(num_clients, n // num_clients, np.int64)
+    sizes[:n % num_clients] += 1
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+    return Partition(perm.astype(np.int64), offsets, sizes)
 
 
 def dirichlet(labels: np.ndarray, num_clients: int, alpha: float = 0.5,
@@ -46,9 +102,9 @@ def dirichlet(labels: np.ndarray, num_clients: int, alpha: float = 0.5,
     paper's §I motivation for one-shot aggregation per round).
 
     Every client is guaranteed ≥ ``min_size`` samples: an empty client
-    would poison the whole downstream pipeline (``_padded_indices`` pads
-    rows with ``idx[0]`` and the batch gathers would sample from a
-    zero-length pool).  At small alpha the Dirichlet proportions
+    would poison the whole downstream pipeline (the batch sampler pads
+    each client's key row with its first index and would otherwise draw
+    from a zero-length pool).  At small alpha the Dirichlet proportions
     routinely starve clients, so the split re-draws up to ``max_draws``
     times and then falls back to a deterministic **min-quota repair** on
     the best draw: under-quota clients take samples from the largest
@@ -96,32 +152,65 @@ def dirichlet(labels: np.ndarray, num_clients: int, alpha: float = 0.5,
                 best[i].append(best[donor].pop())
                 sizes[i] += 1
                 sizes[donor] -= 1
-    indices = [np.asarray(sorted(ix), np.int64) for ix in best]
-    return Partition(indices,
-                     np.asarray([len(ix) for ix in indices], np.int64))
+    return Partition.from_indices(
+        [np.asarray(sorted(ix), np.int64) for ix in best])
 
 
-def _padded_indices(partition: Partition, width: int) -> np.ndarray:
-    """(I, width) index matrix, rows right-padded with the row's first
-    index (never selected — padded key slots are +inf)."""
-    out = np.empty((partition.num_clients, width), np.int64)
-    for i, idx in enumerate(partition.indices):
-        out[i, :len(idx)] = idx
-        out[i, len(idx):] = idx[0]
+def sample_cohorts(num_clients: int, cohort_size: int, round_ids,
+                   seed: int = 0) -> np.ndarray:
+    """Per-round participating cohorts: (T, S) client ids, **sorted
+    ascending** within each round.
+
+    The draw is seed-stable per (seed, round id) — its rng stream is
+    independent of the batch draw's, so adding partial participation
+    never perturbs the mini-batch schedule — and uniform over S-subsets
+    without replacement.  Sorted order makes the cohort aggregate sum
+    its terms in ascending-client-id order, i.e. exactly the order of a
+    masked full-population sum with the non-participants' zero terms
+    removed (zero addends are exact no-ops), which is what lets cohort
+    runs be compared bit-for-bit against masked reference runs.
+
+    ``cohort_size == num_clients`` short-circuits to the identity cohort
+    (no rng consumed): full participation keeps exact full-population
+    semantics and bit-identical trajectories.
+    """
+    s = int(cohort_size)
+    if not 1 <= s <= num_clients:
+        raise ValueError(
+            f"cohort_size={s} out of range [1, {num_clients}]")
+    round_ids = np.asarray(round_ids, np.int64)
+    if s == num_clients:
+        return np.broadcast_to(np.arange(num_clients, dtype=np.int64),
+                               (len(round_ids), s)).copy()
+    out = np.empty((len(round_ids), s), np.int64)
+    for k, t in enumerate(round_ids):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, int(t), _COHORT_STREAM]))
+        out[k] = np.sort(rng.choice(num_clients, size=s, replace=False))
     return out
 
 
 def sample_schedule(partition: Partition, batch_size: int,
-                    round_ids, seed: int = 0) -> np.ndarray:
-    """All rounds' mini-batches in one vectorized draw: (T, I, B) indices.
+                    round_ids, seed: int = 0,
+                    cohorts=None) -> np.ndarray:
+    """Mini-batch index schedule: (T, I, B), or (T, S, B) with a cohort.
 
     Draws are **seed-stable**: the batch of round t depends only on
     (seed, t) and the partition — so algorithms sharing a seed and round
     ids see identical batches (paired convergence comparisons), and the
     whole schedule can be staged on device once instead of per round.
     Each round uses one Generator vectorized across all clients
-    (random-key argpartition for the without-replacement draw) — replacing
-    the seed's per-client-per-round ``SeedSequence`` + ``choice`` loop.
+    (random-key argpartition for the without-replacement draw).
+
+    ``cohorts`` — optional (T, S) per-round client ids aligned with
+    ``round_ids`` (:func:`sample_cohorts`).  Only the cohort's rows are
+    emitted, so schedule memory is O(T·S·B) — the old O(T·I·B) tensor is
+    never allocated.  The per-round draw itself still consumes the
+    full-population rng stream before row selection, which keeps every
+    client's batch independent of who else participates: the cohort
+    schedule is a row-selection of the full-participation schedule, row
+    for row, bit for bit.  (The O(I·width) cost is a *transient* per
+    round on the host, not T·I resident indices on the device.)
 
     Clients with N_i ≥ B sample without replacement, smaller clients with
     replacement, matching :func:`sample_minibatches`'s contract.
@@ -130,25 +219,51 @@ def sample_schedule(partition: Partition, batch_size: int,
     sizes = partition.sizes
     i_cl = partition.num_clients
     width = max(int(sizes.max()), batch_size)
-    padded = _padded_indices(partition, width)
-    valid = np.arange(width)[None, :] < sizes[:, None]       # (I, W)
     no_repl = sizes >= batch_size                            # per-client mode
 
-    out = np.empty((len(round_ids), i_cl, batch_size), np.int64)
+    if cohorts is not None:
+        cohorts = np.asarray(cohorts, np.int64)
+        if cohorts.shape[0] != len(round_ids):
+            raise ValueError(
+                f"cohorts has {cohorts.shape[0]} rounds, round_ids "
+                f"{len(round_ids)}")
+        rows = cohorts.shape[1]
+    else:
+        rows = i_cl
+    out = np.empty((len(round_ids), rows, batch_size), np.int64)
     any_repl = bool((~no_repl).any())
+    # Clients are processed in blocks so the (block, width) key/pad
+    # transients stay bounded even for skewed partitions whose largest
+    # client makes width huge (one hot client at I=10k would otherwise
+    # cost O(I·width) per round).  Generator.random fills row-major from
+    # a sequential bitstream, so any block split consumes the *same*
+    # stream as one (I, width) draw — draws are bit-identical for every
+    # block size.
+    block = max(1, _BLOCK_ELEMS // width)
+    col = np.arange(width)[None, :]
     for k, t in enumerate(round_ids):
         rng = np.random.default_rng(np.random.SeedSequence([seed, int(t)]))
-        keys = rng.random((i_cl, width), dtype=np.float32)
-        keys[~valid] = np.inf
-        # uniform B-subset per row: the B smallest of N_i iid uniform keys
-        sel = np.argpartition(keys, batch_size - 1, axis=1)[:, :batch_size]
-        out[k] = np.take_along_axis(padded, sel, axis=1)
+        full = np.empty((i_cl, batch_size), np.int64)
+        for lo in range(0, i_cl, block):
+            hi = min(lo + block, i_cl)
+            sz = sizes[lo:hi, None]
+            keys = rng.random((hi - lo, width), dtype=np.float32)
+            keys[col >= sz] = np.inf
+            # uniform B-subset per row: the B smallest of N_i iid keys
+            sel = np.argpartition(keys, batch_size - 1,
+                                  axis=1)[:, :batch_size]
+            padded = partition.flat[partition.offsets[lo:hi, None]
+                                    + np.where(col < sz, col, 0)]
+            full[lo:hi] = np.take_along_axis(padded, sel, axis=1)
         if any_repl:
-            # with-replacement fallback for clients smaller than the batch
+            # with-replacement fallback for clients smaller than the
+            # batch; drawn after the key stream, exactly as before —
+            # indexed straight off the arena (flat[offset + ⌊u·N_i⌋])
             u = rng.random((i_cl, batch_size))
-            wr = np.take_along_axis(
-                padded, (u * sizes[:, None]).astype(np.int64), axis=1)
-            out[k] = np.where(no_repl[:, None], out[k], wr)
+            wr = partition.flat[partition.offsets[:, None]
+                                + (u * sizes[:, None]).astype(np.int64)]
+            full = np.where(no_repl[:, None], full, wr)
+        out[k] = full if cohorts is None else full[cohorts[k]]
     return out
 
 

@@ -1,33 +1,51 @@
-"""Composable cross-client aggregation strategies.
+"""Composable cross-client aggregation strategies — cohort-native.
 
 The CSSCA framework underlying the paper (arXiv:1801.08266) is agnostic
 to *how* the stochastic estimate Σ_i λ_i m_i is formed — it only needs
 the aggregate.  This module makes that a first-class, interchangeable
-layer.  A strategy has these parts:
+layer, and makes partial participation **cohort-native**: a strategy
+declares how many clients participate per round (:meth:`cohort_size`),
+the engine draws that cohort host-side into the schedule
+(:func:`repro.data.partition.sample_cohorts`), and everything downstream
+— batch gathers, uploads, reweighting, masking, the wire ledger — only
+ever touches the S cohort members.  Nothing in a round is O(I); the old
+formulation (full-I round weights with I−S zeros masking wasted uploads)
+is gone.
 
-* ``round_weights(weights, key, combine)`` — the effective per-client
-  weights λ'_i for this round.  Partial participation lives here: the
-  sampled subset's weights are rescaled (sum-combine, unbiased) or
-  re-normalized (mean-combine, FedAvg-style).
+A strategy has these parts:
+
+* ``cohort_size(num_clients)`` — S, the number of clients that
+  participate in (and upload during) one round.  The engine sizes the
+  per-round schedule, the vmap over client uploads, and the client-mesh
+  shards by this.
+* ``cohort_weights(weights, combine, num_clients)`` — the effective
+  per-client weights λ'_i for the round, computed **from the gathered
+  cohort's weights** (shape (S,), already gathered by the engine from
+  the population weight vector; sentinel-padded slots arrive as exact
+  zeros).  Partial participation lives here: sum-combine cohorts are
+  rescaled by I/S (unbiased — E[Σ_{i∈S} (I/S) λ_i m_i] = Σ_i λ_i m_i),
+  mean-combine cohorts re-normalize to Σ λ' = 1 (FedAvg-style).  S = I
+  short-circuits to the identity so full participation is bit-identical
+  to :class:`PlainAggregation`.
 * ``needs_messages`` — whether the server must see *individual* client
   uploads.  Linear strategies (plain, sampled) don't: since the upload
   map of every sum-combine algorithm is additive in its batch,
   Σ_i λ'_i upload(batch_i) == upload(⊎_i λ'-weighted batch_i), and the
-  engine evaluates the aggregate directly on the weighted super-batch —
-  no per-client message tensors are ever materialized (the I× model-size
-  write/read was the engine's per-round bandwidth floor).
+  engine evaluates the aggregate directly on the weighted cohort
+  super-batch — no per-client message tensors are ever materialized.
 * ``combine_messages(wmsgs, key)`` — reduction over explicit pre-weighted
-  per-client messages (leading axis I), for strategies that do need them.
-* ``partial_combine(wmsgs, key, client_offset, num_clients)`` /
+  per-cohort-member messages (leading axis S), for strategies that do
+  need them.
+* ``partial_combine(wmsgs, key, cohort_offset, cohort_size)`` /
   ``finalize_combine(partial)`` — the *sharded* decomposition of
-  ``combine_messages``: each device reduces its local client shard
-  (global ids [offset, offset + I_loc)), the partials are ``psum``-ed
-  over the client mesh axis, and ``finalize_combine`` maps the summed
-  partial to the aggregate.  For every strategy here the partial is a
-  plain pytree sum — float messages for linear strategies, *int32
-  fixed-point masked uploads* for secure aggregation, whose psum is the
-  exact Z_{2^32} wraparound sum.  ``combine_messages`` is definitionally
-  ``finalize(partial(all clients))``.
+  ``combine_messages``: each device reduces its local slice of the
+  cohort (cohort positions [offset, offset + S_loc) of S), the partials
+  are ``psum``-ed over the client mesh axis, and ``finalize_combine``
+  maps the summed partial to the aggregate.  For every strategy here the
+  partial is a plain pytree sum — float messages for linear strategies,
+  *int32 fixed-point masked uploads* for secure aggregation, whose psum
+  is the exact Z_{2^32} wraparound sum.  ``combine_messages`` is
+  definitionally ``finalize(partial(whole cohort))``.
 
 All strategies work with all four algorithms — including secure
 Algorithm 2, which the paper's §III-B requires: its (value, gradient)
@@ -38,14 +56,19 @@ Secure aggregation is Bonawitz-style pairwise additive masking done in
 messages are fixed-point quantized to int32, pair masks are uniform over
 Z_{2^32} and cancel *exactly* under wraparound addition — the unmasked
 aggregate is bit-for-bit the sum of the quantized messages, with no
-floating-point mask residue.  Two implementations:
+floating-point mask residue.  Pair-mask streams are keyed on **cohort
+positions** (0 … S−1): only the S participating clients exchange pair
+seeds, so the masking protocol itself is O(S), not O(I) — with
+``num_sampled=`` set, S of I clients are drawn per round exactly like
+:class:`SampledClients` and masking runs over that cohort only.  Two
+implementations:
 
 * ``streaming=True`` (default) — the streaming path of
   :mod:`repro.kernels.secure_agg`: quantization, counter-based pair-mask
   generation and the signed Z_{2^32} accumulate fused in one pass over
   the message (Pallas kernel on TPU, masks generated in VMEM; XLA
-  elsewhere).  O(I·model) traffic, nothing pair-shaped ever touches HBM.
-* ``streaming=False`` — the reference path: all P = I(I−1)/2 pair masks
+  elsewhere).  O(S·model) traffic, nothing pair-shaped ever touches HBM.
+* ``streaming=False`` — the reference path: all P = S(S−1)/2 pair masks
   materialized as model-sized tensors and combined by a signed
   tensordot.  O(P·model) traffic; kept as the numerical reference and
   the benchmark baseline.
@@ -57,7 +80,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Protocol, runtime_checkable
+from typing import Any, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -73,13 +96,15 @@ PyTree = Any
 class Aggregation(Protocol):
     needs_messages: bool
 
-    def round_weights(self, weights: jnp.ndarray, key,
-                      combine: str) -> jnp.ndarray: ...
+    def cohort_size(self, num_clients: int) -> int: ...
+
+    def cohort_weights(self, weights: jnp.ndarray, combine: str,
+                       num_clients: int) -> jnp.ndarray: ...
 
     def combine_messages(self, wmsgs: PyTree, key) -> PyTree: ...
 
-    def partial_combine(self, wmsgs: PyTree, key, client_offset,
-                        num_clients: int) -> PyTree: ...
+    def partial_combine(self, wmsgs: PyTree, key, cohort_offset,
+                        cohort_size: int) -> PyTree: ...
 
     def finalize_combine(self, partial: PyTree) -> PyTree: ...
 
@@ -92,8 +117,41 @@ class Aggregation(Protocol):
 
 
 def _sum_clients(wmsgs: PyTree) -> PyTree:
-    """Σ_i m_i over the leading client axis of every leaf."""
+    """Σ_i m_i over the leading cohort axis of every leaf."""
     return jax.tree.map(lambda m: jnp.sum(m, axis=0), wmsgs)
+
+
+def _validated_cohort(num_sampled: Optional[int], num_clients: int) -> int:
+    """S for a strategy with an optional ``num_sampled``; range-checked
+    against the population (raised eagerly by the engine before any
+    schedule is drawn)."""
+    if num_sampled is None:
+        return num_clients
+    s = int(num_sampled)
+    if not 1 <= s <= num_clients:
+        raise ValueError(
+            f"num_sampled={s} out of range [1, {num_clients}]")
+    return s
+
+
+def _cohort_reweight(weights, combine: str, num_clients: int, s: int):
+    """The partial-participation reweighting on gathered cohort weights.
+
+    * sum-combine: λ'_i = (I/S)·λ_i — with λ_i = N_i/(B·N) this is the
+      unbiased N_i·I/(S·B·N) estimator of the full sum.
+    * mean-combine: λ'_i = λ_i / Σ_{j∈cohort} λ_j (standard FedAvg
+      client-sampling re-normalization, Σ λ' = 1 exactly).
+
+    S = I returns the weights untouched (both corrections are the
+    identity only up to float rounding), so full participation stays
+    bit-identical to :class:`PlainAggregation`.  Sentinel-padded slots
+    (engine mesh padding) arrive as exact zeros and stay exact zeros.
+    """
+    if s == num_clients:
+        return weights
+    if combine == "mean":
+        return weights / jnp.sum(weights)
+    return weights * (num_clients / s)
 
 
 class _LinearCombine:
@@ -102,8 +160,11 @@ class _LinearCombine:
     the shared ledger hooks: a linear strategy puts the compressor's
     payload on the wire as-is (full participation by default)."""
 
-    def partial_combine(self, wmsgs, key, client_offset, num_clients):
-        del key, client_offset, num_clients
+    def cohort_size(self, num_clients: int) -> int:
+        return num_clients
+
+    def partial_combine(self, wmsgs, key, cohort_offset, cohort_size):
+        del key, cohort_offset, cohort_size
         return _sum_clients(wmsgs)
 
     def finalize_combine(self, partial):
@@ -124,8 +185,8 @@ class PlainAggregation(_LinearCombine):
 
     needs_messages = False
 
-    def round_weights(self, weights, key, combine):
-        del key  # deterministic
+    def cohort_weights(self, weights, combine, num_clients):
+        del combine, num_clients  # deterministic, full participation
         return weights
 
     def combine_messages(self, wmsgs, key):
@@ -138,36 +199,25 @@ class SampledClients(_LinearCombine):
     """Partial participation: S of I clients per round (uniform, without
     replacement), the millions-of-users serving regime.
 
-    * sum-combine: selected weights are rescaled by I/S, so the aggregate
-      is an unbiased estimate of the full sum — E[Σ_{i∈S} (I/S) λ_i m_i]
-      = Σ_i λ_i m_i.
-    * mean-combine: weights re-normalize over the selected subset
-      (standard FedAvg client sampling), keeping Σ λ = 1 exactly.
+    Cohort-native: :meth:`cohort_size` tells the engine to draw S-client
+    cohorts into the schedule and to vmap uploads over S — per-round
+    compute, memory and wire cost are O(S) however large I grows.  The
+    reweighting (:func:`_cohort_reweight`) acts on the gathered cohort's
+    weights only; there is no full-I mask anywhere.
     """
     num_sampled: int
 
     needs_messages = False
 
-    def round_weights(self, weights, key, combine):
-        n = weights.shape[0]
-        s = int(self.num_sampled)
-        if not 1 <= s <= n:
-            raise ValueError(f"num_sampled={s} out of range [1, {n}]")
-        if s == n:
-            # every client participates: the rescale (sum: ×n/s = ×1)
-            # and the re-normalization (mean: ÷Σλ, a float no-op only up
-            # to rounding) are both the identity — return the weights
-            # untouched so S = I is bit-identical to PlainAggregation.
-            return weights
-        perm = jax.random.permutation(key, n)
-        mask = jnp.zeros((n,), weights.dtype).at[perm[:s]].set(1.0)
-        if combine == "mean":
-            w = mask * weights
-            return w / jnp.sum(w)
-        return mask * weights * (n / s)
+    def cohort_size(self, num_clients: int) -> int:
+        return _validated_cohort(self.num_sampled, num_clients)
+
+    def cohort_weights(self, weights, combine, num_clients):
+        return _cohort_reweight(weights, combine, num_clients,
+                                int(self.num_sampled))
 
     def combine_messages(self, wmsgs, key):
-        del key  # selection already folded into the round weights
+        del key  # selection already folded into the cohort schedule
         return _sum_clients(wmsgs)
 
     def participants(self, num_clients: int) -> int:
@@ -177,10 +227,11 @@ class SampledClients(_LinearCombine):
 
 @functools.lru_cache(maxsize=32)
 def _pair_structure(n: int):
-    """Static per-I pair layout for the reference masked path: the
-    P = n(n−1)/2 (lo, hi) index vectors and the (n, P) ±1 sign matrix.
-    Cached so repeated traces (multi-seed sweeps, sharded re-traces)
-    reuse one set of host arrays instead of rebuilding them per trace."""
+    """Static per-cohort-size pair layout for the reference masked path:
+    the P = n(n−1)/2 (lo, hi) index vectors and the (n, P) ±1 sign
+    matrix.  Cached so repeated traces (multi-seed sweeps, sharded
+    re-traces) reuse one set of host arrays instead of rebuilding them
+    per trace."""
     lo, hi = np.triu_indices(n, k=1)
     signs = np.zeros((n, len(lo)), np.int32)
     signs[lo, np.arange(len(lo))] = 1
@@ -194,11 +245,20 @@ class SecureAggregation:
     """Pairwise-masked aggregation in Z_{2^32} (Bonawitz et al., 2017;
     honest-but-curious server, no dropout handling).
 
-    Client i uploads  quant(λ_i m_i) + Σ_{j>i} PRG(s_ij) − Σ_{j<i} PRG(s_ji)
-    (mod 2^32); the server adds the I uploads with int32 wraparound and
-    every mask cancels exactly, recovering Σ_i quant(λ_i m_i) bit-for-bit.
-    The server never sees an individual message — each upload is one-time-
-    padded by masks uniform over Z_{2^32}.
+    Cohort member at position p uploads
+    quant(λ'_p m_p) + Σ_{q>p} PRG(s_pq) − Σ_{q<p} PRG(s_qp)  (mod 2^32);
+    the server adds the S uploads with int32 wraparound and every mask
+    cancels exactly, recovering Σ_p quant(λ'_p m_p) bit-for-bit.  The
+    server never sees an individual message — each upload is one-time-
+    padded by masks uniform over Z_{2^32}.  Mask streams are keyed on
+    cohort *positions*, so the pair-seed exchange involves only the S
+    participants of the round.
+
+    ``num_sampled`` — optional partial participation: S of I clients per
+    round, drawn into the schedule exactly like :class:`SampledClients`
+    (uniform without replacement, sum-combine weights rescaled by I/S,
+    unbiased) with pair masking over the cohort members only.  ``None``
+    is full participation.
 
     ``scale_bits`` sets the fixed-point grid 2^-scale_bits; the true
     aggregate must satisfy |Σ λ m| < 2^(31−scale_bits) per entry (2048 at
@@ -213,6 +273,8 @@ class SecureAggregation:
 
     streaming: bool = True
 
+    num_sampled: Optional[int] = None
+
     needs_messages = True
 
     def __post_init__(self):
@@ -222,15 +284,27 @@ class SecureAggregation:
             raise ValueError(
                 f"scale_bits={b!r} outside [1, 30]: the int32 fixed point"
                 " needs one sign bit and at least one integer bit")
+        s = self.num_sampled
+        if s is not None and (isinstance(s, bool)
+                              or not isinstance(s, (int, np.integer))
+                              or int(s) < 1):
+            raise ValueError(f"num_sampled={s!r} must be a positive int "
+                             "(or None for full participation)")
 
-    def round_weights(self, weights, key, combine):
-        del key  # clients apply their own (static) λ_i before masking
-        return weights
+    def cohort_size(self, num_clients: int) -> int:
+        return _validated_cohort(self.num_sampled, num_clients)
+
+    def cohort_weights(self, weights, combine, num_clients):
+        # clients apply their own λ'_i before masking; under partial
+        # participation λ' carries the same unbiased I/S rescale as
+        # SampledClients (each client knows I, S and its own N_i)
+        return _cohort_reweight(weights, combine, num_clients,
+                                self.cohort_size(num_clients))
 
     # -- communication-ledger hooks ------------------------------------
 
     def participants(self, num_clients: int) -> int:
-        return num_clients
+        return self.cohort_size(num_clients)
 
     def uplink_wire_bytes(self, payload_bytes: int, dense_elements: int,
                           num_clients: int) -> int:
@@ -238,17 +312,19 @@ class SecureAggregation:
         4 bytes per message entry regardless of the compressor (a sparse
         or b-bit payload cannot stay sparse/narrow under one-time-pad
         masking without revealing the support or the range), plus one
-        4-byte pair-seed share per peer per round.  Compression still
-        shapes the message *content* (and quantized-on-grid uploads make
-        the masked aggregate exact); shrinking secure wire bytes needs
-        dimension reduction before masking, which is out of scope."""
+        4-byte pair-seed share per cohort peer per round.  Compression
+        still shapes the message *content* (and quantized-on-grid
+        uploads make the masked aggregate exact); shrinking secure wire
+        bytes needs dimension reduction before masking, which is out of
+        scope."""
         del payload_bytes
-        return 4 * dense_elements + 4 * (num_clients - 1)
+        peers = self.cohort_size(num_clients) - 1
+        return 4 * dense_elements + 4 * peers
 
-    def partial_combine(self, wmsgs, key, client_offset, num_clients):
+    def partial_combine(self, wmsgs, key, cohort_offset, cohort_size):
         return _kops.secure_quant_sum(
             wmsgs, jax.random.key_data(key), scale_bits=self.scale_bits,
-            client_offset=client_offset, num_clients=num_clients)
+            client_offset=cohort_offset, num_clients=cohort_size)
 
     def finalize_combine(self, partial):
         return _kops.secure_dequantize(partial, self.scale_bits)
@@ -280,7 +356,7 @@ class SecureAggregation:
                 lambda k: jax.random.split(k, len(leaves)))(pair_keys)
 
             def _mask_and_sum(li, q):
-                # q: (I, ...) int32.  masks: (P, ...) uniform over Z_2^32.
+                # q: (S, ...) int32.  masks: (P, ...) uniform over Z_2^32.
                 bits = jax.vmap(
                     lambda k: jax.random.bits(k, q.shape[1:], jnp.uint32)
                 )(leaf_keys[:, li])
@@ -302,8 +378,10 @@ def plain() -> PlainAggregation:
     return PlainAggregation()
 
 
-def secure(scale_bits: int = 20, streaming: bool = True) -> SecureAggregation:
-    return SecureAggregation(scale_bits=scale_bits, streaming=streaming)
+def secure(scale_bits: int = 20, streaming: bool = True,
+           num_sampled: Optional[int] = None) -> SecureAggregation:
+    return SecureAggregation(scale_bits=scale_bits, streaming=streaming,
+                             num_sampled=num_sampled)
 
 
 def sampled(num_sampled: int) -> SampledClients:

@@ -28,10 +28,13 @@ Three compressors:
   flattened message, with **per-client error feedback**: the discarded
   mass (plus, when ``bits`` is set, the quantization error of the kept
   values) accumulates in a per-client residual that is added to the next
-  round's message before compressing.  The residual lives in a dedicated
-  per-client slot of the engine's scan carry, sharded over the client
-  mesh exactly like the uploads (each device owns its clients'
-  residuals; nothing crosses the wire).
+  round's message before compressing.  The residuals live in a
+  **population-resident (I, …) arena** slot of the engine's scan carry:
+  each round gathers the participating cohort's rows, compresses, and
+  scatters the updated residuals back — clients outside the round's
+  cohort keep their residual untouched (client-side state never moves
+  when its owner doesn't participate, and nothing residual-shaped ever
+  crosses the wire).
 
 Compression is a *client-side, per-client* operation, so any non-identity
 compressor forces the engine to materialize per-client messages even for

@@ -6,15 +6,19 @@ The engine is **task-agnostic**: it runs any
 :class:`repro.fed.aggregation.Aggregation` strategy and any
 :mod:`repro.fed.compression` compressor, over any task's data — the
 MNIST MLP, a reduced decoder-only LM, RWKV-6 — as one device-resident
-loop:
+loop.  It is also **cohort-native**: per-round cost is O(S) in the
+participating cohort size S, never O(I) in the population — the design
+point that lets one process simulate I in the tens of thousands with a
+small per-round cohort (the paper's sampled-connected-clients regime):
 
-1. the whole mini-batch index schedule (T, I, [E,] B) is drawn up front
-   (one vectorized host call, :func:`repro.data.partition.sample_schedule`)
-   and transferred once;
+1. the per-round cohorts (T, S) and their mini-batch index schedule
+   (T, S, [E,] B) are drawn up front (one vectorized host call each —
+   :func:`repro.data.partition.sample_cohorts` /
+   :func:`~repro.data.partition.sample_schedule`) and transferred once;
+   nothing (T, I, ·)-shaped is ever materialized;
 2. the training arrays live on device; per-round batches are device-side
-   gathers inside the scan body (tasks declare row-indexable
-   ``x_train`` / ``y_train`` — feature rows for supervised tasks, token
-   sequences for LM tasks);
+   gathers of the cohort's indices inside the scan body (tasks declare
+   row-indexable ``x_train`` / ``y_train``);
 3. rounds between eval points run as one ``lax.scan`` — one XLA dispatch
    per eval interval instead of per round;
 4. params, state, compressor state and the round schedule chunk are
@@ -23,22 +27,28 @@ loop:
    chunk;
 5. with ``mesh=`` (a 1-D client mesh from
    :func:`repro.launch.mesh.make_client_mesh`) the round body runs under
-   ``shard_map`` over the client axis: each device owns I/D clients,
+   ``shard_map`` over the client axis: **the cohort — not the
+   population — is sharded**, so ``I=10_000, S=8`` runs on the same
+   2-device mesh as ``I=16``.  Each device owns S/D cohort slots,
    computes their uploads locally, and the server aggregate is one
    ``psum`` — secure aggregation psums *int32 masked fixed-point
    partials*, so the sharded aggregate is bit-identical to the
-   single-device one.  ``mesh=None`` (default) is the single-device
-   fallback.
+   single-device one.  When the device count does not divide S, the
+   cohort is padded host-side with zero-weight sentinel slots (dropped
+   on every write-back), so any (S, device-count) combination runs.
+   ``mesh=None`` (default) is the single-device fallback.
 
 There is exactly **one** scan-body builder (:func:`_chunk_fn`).  Per
-round the body is:  gather (I, [E,] B) client batches → vmap
-``client_upload`` over clients → [compress per client, with the
-error-feedback residual threaded through the structured scan carry —
+round the body is:  gather the cohort's (S, [E,] B) client batches →
+vmap ``client_upload`` over the S cohort members → [compress per
+member, with the error-feedback residual gathered from / scattered back
+to a **population-resident (I, …) arena** in the structured scan carry —
 see :mod:`repro.fed.compression`] → aggregate (plain / secure /
-sampled) → ``server_step``.  The carry is :class:`RoundCarry`; the
-compressor-state slot is the empty pytree ``()`` when no compressor is
-set, so the uncompressed trace is numerically untouched (trajectories
-are bit-identical to the pre-unification engine — pinned by
+sampled, over cohort members only) → ``server_step``.  The carry is
+:class:`RoundCarry`; the compressor-state slot is the empty pytree
+``()`` when no compressor is set, so the uncompressed trace is
+numerically untouched.  With S = I the cohort is the identity and
+trajectories are bit-identical to the pre-cohort engine (pinned by
 ``tests/test_task_bitexact.py``).
 
 Evaluation happens at chunk boundaries on the host through the task's
@@ -60,7 +70,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.protocol import FedAlgorithm
-from repro.data.partition import Partition, sample_schedule
+from repro.data.partition import (Partition, sample_cohorts,
+                                  sample_schedule)
 from repro.fed import compression as compression_mod
 from repro.fed.aggregation import Aggregation, PlainAggregation
 from repro.launch import mesh as mesh_mod
@@ -82,17 +93,15 @@ class History:
 
     The communication ledger lives here: ``uplink_bytes_per_round`` /
     ``downlink_bytes_per_round`` are the *exact* wire bytes of one round
-    (dtype-, sparsity- and mask-overhead-aware, summed over the
+    (dtype-, sparsity- and mask-overhead-aware, summed over the S
     participating clients — see :func:`repro.fed.compression.round_bytes`
     and the ``comm`` breakdown), and ``cum_uplink_bytes`` is the
     cumulative uplink at each eval point, aligned with ``rounds`` — the
     x-axis of the paper's accuracy-vs-communication comparison.
 
-    ``uplink_floats_per_round`` is **deprecated** (reading it warns;
-    removal is scheduled for the release after next — see README):
-    it counts message elements assuming a dense float32 wire, which is
-    wrong under compression, int32 secure masking, or partial
-    participation.  Use ``uplink_bytes_per_round``.
+    (The float32-dense ``uplink_floats_per_round`` element count, wrong
+    under compression / int32 masking / partial participation, went
+    through its deprecation cycle and has been removed.)
 
     Only the engine fills the ledger; histories from the legacy
     reference drivers leave the byte fields 0 and ``cum_uplink_bytes``
@@ -106,7 +115,6 @@ class History:
     downlink_bytes_per_round: int = 0
     comm: Dict[str, Any] = dataclasses.field(default_factory=dict)
     wall_seconds: float = 0.0
-    _uplink_floats: int = 0     # deprecated wire model — see docstring
 
     def metric(self, name: str) -> List[float]:
         """The (live, appendable) series for ``name`` — the *write*
@@ -130,15 +138,6 @@ class History:
     def sparsity(self) -> List[float]:
         return self.metrics.get("sparsity", [])
 
-    @property
-    def uplink_floats_per_round(self) -> int:
-        warnings.warn(
-            "History.uplink_floats_per_round is deprecated (it assumes a "
-            "dense float32 wire); use uplink_bytes_per_round / the comm "
-            "breakdown. Scheduled for removal — see README.",
-            DeprecationWarning, stacklevel=2)
-        return self._uplink_floats
-
     def as_dict(self) -> Dict[str, Any]:
         d = {"rounds": list(self.rounds),
              "metrics": {k: list(v) for k, v in self.metrics.items()},
@@ -147,8 +146,7 @@ class History:
              "uplink_bytes_per_round": self.uplink_bytes_per_round,
              "downlink_bytes_per_round": self.downlink_bytes_per_round,
              "comm": dict(self.comm),
-             "wall_seconds": self.wall_seconds,
-             "uplink_floats_per_round": self._uplink_floats}
+             "wall_seconds": self.wall_seconds}
         # seed-era flat keys, kept for serialized-schema compatibility
         for k in _LEGACY_METRICS:
             d[k] = list(self.metrics.get(k, []))
@@ -236,27 +234,45 @@ def _round_ids(rounds: int, local_steps: int, e_axis: bool) -> np.ndarray:
 
 
 def build_schedule(part: Partition, batch_size: int, rounds: int,
-                   local_steps: int, seed: int,
-                   e_axis: bool = False) -> np.ndarray:
-    """(T, I, B) for sum-combine algorithms, (T, I, E, B) when ``e_axis``
-    (mean-combine local-step algorithms — the E axis is kept even for
-    E = 1, since the client scans it as local steps)."""
-    ids = _round_ids(rounds, local_steps, e_axis)
-    idx = sample_schedule(part, batch_size, ids, seed)       # (T·E, I, B)
-    if not e_axis:
-        return idx
+                   local_steps: int, seed: int, e_axis: bool = False,
+                   cohort_size: Optional[int] = None):
+    """The scan-visible schedule: per-round cohorts plus their batches.
+
+    Returns ``(cohorts, idx)`` — ``cohorts`` is (T, S) sorted client ids
+    (:func:`repro.data.partition.sample_cohorts`; the identity when
+    S = I), ``idx`` is (T, S, B) for sum-combine algorithms or
+    (T, S, E, B) when ``e_axis`` (mean-combine local-step algorithms —
+    the E axis is kept even for E = 1, since the client scans it as
+    local steps; the round's cohort is shared by its E local steps).
+
+    Index memory is O(T·S·B): with S ≪ I the old (T·E, I, B) tensor is
+    never allocated (pinned by ``tests/test_population.py``).
+    """
     i = part.num_clients
-    return idx.reshape(rounds, local_steps, i, batch_size).transpose(
-        0, 2, 1, 3)
+    s = i if cohort_size is None else int(cohort_size)
+    cohorts = sample_cohorts(i, s, np.arange(1, rounds + 1,
+                                             dtype=np.int64), seed)
+    ids = _round_ids(rounds, local_steps, e_axis)
+    per_id = cohorts if not e_axis \
+        else np.repeat(cohorts, local_steps, axis=0)
+    idx = sample_schedule(part, batch_size, ids, seed,
+                          cohorts=per_id)                    # (T·E, S, B)
+    if e_axis:
+        idx = idx.reshape(rounds, local_steps, s,
+                          batch_size).transpose(0, 2, 1, 3)
+    return cohorts, idx
 
 
 class RoundCarry(NamedTuple):
     """The structured scan carry of the (single) round body.
 
-    ``cstate`` is the optional compressor slot: per-client error-feedback
-    residuals with a leading client axis when a stateful compressor is
-    set, the empty pytree ``()`` otherwise — an empty slot adds no
-    arrays, so the uncompressed trace's numerics are untouched."""
+    ``cstate`` is the optional compressor slot: a **population-resident
+    arena** of per-client error-feedback residuals with a leading (I, …)
+    client axis when a stateful compressor is set (each round gathers
+    the cohort's rows, compresses, and scatters the updated residuals
+    back — non-participants' residuals ride through untouched), the
+    empty pytree ``()`` otherwise — an empty slot adds no arrays, so the
+    uncompressed trace's numerics are untouched."""
     params: PyTree
     state: PyTree
     cstate: PyTree
@@ -279,61 +295,78 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
     (not closed over), so repeated ``run`` calls — the multi-seed
     benchmark loops — reuse one compiled executable instead of
     re-tracing a fresh closure per run.  ``params``, ``state``,
-    ``cstate`` and the round-schedule chunk are donated: the scan's
-    carry update happens in place instead of holding both the old and
-    new model/state per chunk.
+    ``cstate`` and the cohort/index schedule chunks are donated: the
+    scan's carry update happens in place instead of holding both the old
+    and new model/state per chunk.
 
-    One round body, three statically-selected upload paths:
+    One round body, three statically-selected upload paths — all of them
+    O(S) in the cohort, regardless of I:
 
     * sum-combine × linear aggregation × no compressor — the aggregate
-      is evaluated directly on the round-weighted super-batch
+      is evaluated directly on the round-weighted cohort super-batch
       (``client_upload`` is additive in the batch, see
       :mod:`repro.core.protocol`).  One gradient per round; per-client
-      message tensors (I× model size of HBM traffic) are never
+      message tensors (S× model size of HBM traffic) are never
       materialized.
     * sum-combine, messages materialized (secure aggregation and/or a
-      compressor) — per-client uploads computed under vmap with each
-      client's λ'_i folded into its per-sample weights, optionally
-      compressed per client (participation-gated, error-feedback
-      residual in the carry), then combined by the strategy.
-    * mean-combine (FedAvg) — per-client models under vmap; a compressor
+      compressor) — per-member uploads computed under vmap over the S
+      cohort slots with each member's λ'_i folded into its per-sample
+      weights, optionally compressed per member (error-feedback residual
+      gathered from / scattered back to the (I, …) arena in the carry),
+      then combined by the strategy.
+    * mean-combine (FedAvg) — per-member models under vmap; a compressor
       compresses the *model delta* m_i − ω^t (top-k of an update is
       sparsification; top-k of a raw model would discard it) and the
       weighted message λ'_i(ω^t + Δ̂_i) is reassembled afterwards;
       uncompressed messages are weighted directly.
 
-    Under a client mesh the same bodies run per client *shard*
-    (``shard_map`` over the mesh's first axis): round weights are
-    computed identically on every device from the replicated full
-    ``weights`` and sliced to the local clients, uploads (and residuals)
-    stay local, and the aggregate is one ``psum`` — of the super-batch
-    statistic (linear strategies) or of the strategy's partial combine
-    (secure: int32 masked fixed-point uploads, whose wraparound psum
-    reproduces the single-device Z_{2^32} aggregate bit-for-bit).
+    Under a client mesh the same bodies run per **cohort shard**
+    (``shard_map`` over the mesh's first axis): cohort ids and round
+    weights are computed identically on every device from the replicated
+    cohort row and population weights, then sliced to the local S/D
+    slots; uploads stay local and the aggregate is one ``psum`` — of the
+    super-batch statistic (linear strategies) or of the strategy's
+    partial combine (secure: int32 masked fixed-point uploads keyed on
+    cohort positions, whose wraparound psum reproduces the single-device
+    Z_{2^32} aggregate bit-for-bit).  The residual arena is replicated;
+    the cohort's updated rows are ``all_gather``-ed (O(S·model), cohort-
+    sized) and scattered identically on every device.  Sentinel-padded
+    cohort slots (id = I, present when D ∤ S) carry exact-zero weights
+    and are dropped from every scatter (``mode="drop"``).
     """
     combine = algorithm.combine
     compressed = compressor is not None
 
     def chunk(params, state, cstate, x_train, y_train, weights, key_data,
-              idx_chunk, ts, shard=None):
+              cohort_chunk, idx_chunk, ts, shard=None):
         session_key = jax.random.wrap_key_data(key_data)
         num_clients = weights.shape[0]
 
         def one_round(carry, xs):
             params, state, cstate = carry
-            idx_t, t = xs
+            cohort_t, idx_t, t = xs
             key_t = jax.random.fold_in(session_key, t)
-            rw = aggregation.round_weights(weights, key_t, combine)
-            i_loc = idx_t.shape[0]
+            # cohort-wide round weights, computed identically on every
+            # device (cohort_t and weights are replicated): gather the
+            # cohort's population weights — sentinel pads (id = I) clamp
+            # in the gather and are forced to exact zero — then apply
+            # the strategy's reweighting.
+            live_full = cohort_t < num_clients
+            w_c = jnp.where(live_full, weights[cohort_t], 0.0)
+            rw_full = aggregation.cohort_weights(w_c, combine, num_clients)
+            s_loc = idx_t.shape[0]
             offset = 0
+            rw, cids, live = rw_full, cohort_t, live_full
             if shard is not None:
-                offset = jax.lax.axis_index(shard) * i_loc
-                rw = jax.lax.dynamic_slice(rw, (offset,), (i_loc,))
+                offset = jax.lax.axis_index(shard) * s_loc
+                rw = jax.lax.dynamic_slice(rw_full, (offset,), (s_loc,))
+                cids = jax.lax.dynamic_slice(cohort_t, (offset,), (s_loc,))
+                live = jax.lax.dynamic_slice(live_full, (offset,), (s_loc,))
 
             if not compressed and combine == "sum" \
                     and not aggregation.needs_messages:
                 # linear fast path: one upload on the weighted super-batch
-                flat = idx_t.reshape(-1)                     # (I·B,)
+                flat = idx_t.reshape(-1)                     # (S·B,)
                 n_per = idx_t.shape[-1]
                 batch = (x_train[flat], y_train[flat],
                          jnp.repeat(rw, n_per))
@@ -344,13 +377,13 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                 return RoundCarry(params, state, cstate), None
 
             if combine == "sum":
-                xb, yb = x_train[idx_t], y_train[idx_t]      # (I, B, ·)
+                xb, yb = x_train[idx_t], y_train[idx_t]      # (S, B, ·)
                 ws = jnp.broadcast_to(rw[:, None], idx_t.shape)
                 raw = jax.vmap(algorithm.client_upload,
                                in_axes=(None, None, 0))(params, state,
                                                         (xb, yb, ws))
             else:                                            # mean: models
-                batch = (x_train[idx_t], y_train[idx_t])     # (I, E, B, ·)
+                batch = (x_train[idx_t], y_train[idx_t])     # (S, E, B, ·)
                 models = jax.vmap(algorithm.client_upload,
                                   in_axes=(None, None, 0))(params, state,
                                                            batch)
@@ -358,26 +391,40 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                     jax.tree.map(lambda m, p: m - p, models, params)
 
             if compressed:
-                cids = (jnp.asarray(offset).astype(jnp.uint32)
-                        + jnp.arange(i_loc, dtype=jnp.uint32))
+                # gather the cohort's residuals from the (I, …) arena;
+                # PRF streams are keyed on *global* client ids, so a
+                # client's rounding/threshold draws are identical
+                # whichever cohort slot (or device) it lands on
+                resid = jax.tree.map(lambda a: a[cids], cstate)
                 kd = jax.random.key_data(key_t).reshape(-1) \
                     .astype(jnp.uint32)
                 k0, k1 = kd[0], kd[-1]
-                comp, new_cstate = jax.vmap(
+                comp, new_resid = jax.vmap(
                     lambda m, r, c: compressor.compress(m, r, k0, k1, c)
-                )(raw, cstate, cids)
+                )(raw, resid, cids.astype(jnp.uint32))
 
-                # participation gating: a zero-round-weight client
-                # (sampled out) uploads nothing, must not flush residual
-                live = rw != 0
+                # sentinel-padded slots (mesh padding) must contribute
+                # nothing: their messages are forced to zero here, and
+                # their residual rows are dropped by the scatter below
+                def _gate(c):
+                    m = live.reshape((-1,) + (1,) * (c.ndim - 1))
+                    return jnp.where(m, c, jnp.zeros_like(c))
 
-                def _sel(new, old):
-                    m = live.reshape((-1,) + (1,) * (new.ndim - 1))
-                    return jnp.where(m, new, old)
-
-                comp = jax.tree.map(
-                    lambda c: _sel(c, jnp.zeros_like(c)), comp)
-                cstate = jax.tree.map(_sel, new_cstate, cstate)
+                comp = jax.tree.map(_gate, comp)
+                if shard is None:
+                    upd, at_ids = new_resid, cids
+                else:
+                    # cohort-sized collective: every device sees all S
+                    # updated rows and applies the identical scatter, so
+                    # the replicated arena stays replicated bit-for-bit
+                    upd = jax.tree.map(
+                        lambda u: jax.lax.all_gather(u, shard, axis=0,
+                                                     tiled=True),
+                        new_resid)
+                    at_ids = cohort_t
+                cstate = jax.tree.map(
+                    lambda a, u: a.at[at_ids].set(u, mode="drop"),
+                    cstate, upd)
                 if combine == "sum":
                     msgs = comp                              # λ' in ws
                 else:
@@ -396,7 +443,7 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                 agg = aggregation.combine_messages(msgs, key_t)
             else:
                 partial = aggregation.partial_combine(
-                    msgs, key_t, offset, num_clients)
+                    msgs, key_t, offset, cohort_t.shape[0])
                 agg = aggregation.finalize_combine(
                     jax.lax.psum(partial, shard))
             params, state = algorithm.server_step(params, state, agg)
@@ -404,26 +451,30 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
 
         carry, _ = jax.lax.scan(one_round,
                                 RoundCarry(params, state, cstate),
-                                (idx_chunk, ts))
+                                (cohort_chunk, idx_chunk, ts))
         return carry.params, carry.state, carry.cstate
 
     if mesh is None:
-        return jax.jit(chunk, donate_argnums=(0, 1, 2, 7))
+        return jax.jit(chunk, donate_argnums=(0, 1, 2, 7, 8))
 
     axis = mesh.axis_names[0]
     spec = jax.sharding.PartitionSpec
 
     def sharded_body(params, state, cstate, x_train, y_train, weights,
-                     key_data, idx_chunk, ts):
+                     key_data, cohort_chunk, idx_chunk, ts):
         return chunk(params, state, cstate, x_train, y_train, weights,
-                     key_data, idx_chunk, ts, shard=axis)
+                     key_data, cohort_chunk, idx_chunk, ts, shard=axis)
 
+    # the cohort axis of idx_chunk is sharded; cohort ids, population
+    # weights and the residual arena are replicated (the arena's rows
+    # belong to arbitrary clients, not to a device — the cohort-sized
+    # all_gather above keeps the copies identical)
     fn = mesh_mod.shard_map_fn(
         sharded_body, mesh,
-        in_specs=(spec(), spec(), spec(axis), spec(), spec(), spec(),
-                  spec(), spec(None, axis), spec()),
-        out_specs=(spec(), spec(), spec(axis)))
-    return jax.jit(fn, donate_argnums=(0, 1, 2, 7))
+        in_specs=(spec(), spec(), spec(), spec(), spec(), spec(),
+                  spec(), spec(), spec(None, axis), spec()),
+        out_specs=(spec(), spec(), spec()))
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 7, 8))
 
 
 def _upload_avals(algorithm: FedAlgorithm, x_train, y_train,
@@ -458,36 +509,48 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
 
     Returns the final parameters and the :class:`History` (task metrics
     plus the communication ledger).  ``seed`` controls the parameter
-    init (when ``params`` is ``None``), the mini-batch schedule and the
-    per-round aggregation / compression key (client sampling / mask /
+    init (when ``params`` is ``None``), the cohort draw, the mini-batch
+    schedule and the per-round aggregation / compression key (mask /
     stochastic-rounding derivation).
 
     ``compressor`` — a :mod:`repro.fed.compression` strategy applied to
     every client upload before aggregation (``None`` or
     ``compression.identity()``: dense uploads, bit-identical
     trajectories).  Stateful compressors (top-k error feedback) keep a
-    per-client residual in the scan carry, sharded over the client mesh.
+    per-client residual in a population-resident (I, …) arena slot of
+    the scan carry; each round gathers and scatters only the cohort's
+    rows.
 
     ``mesh`` — a 1-D client mesh (:func:`repro.launch.mesh.make_client_mesh`)
-    shards each round's clients over the mesh devices with psum
-    aggregation; the device count must divide the number of clients.
-    ``None`` runs single-device.
+    shards each round's **cohort** over the mesh devices with psum
+    aggregation; cohorts are sentinel-padded to a device multiple when
+    needed, so any population size I and cohort size S run on any device
+    count.  ``None`` runs single-device.
     """
     aggregation = aggregation if aggregation is not None \
         else PlainAggregation()
     if compressor is not None and compressor.is_identity:
         compressor = None       # same trace, cache entry and trajectory
-    if mesh is not None:
-        ndev = mesh.shape[mesh.axis_names[0]]
-        if part.num_clients % ndev:
-            raise ValueError(
-                f"client mesh of {ndev} devices does not divide "
-                f"I={part.num_clients} clients")
+    cohort = aggregation.cohort_size(part.num_clients)   # validates range
     if params is None:
         params = task.init_params(jax.random.key(seed))
-    schedule = build_schedule(part, batch_size, rounds,
-                              algorithm.local_steps, seed,
-                              e_axis=algorithm.combine == "mean")
+    cohorts, schedule = build_schedule(part, batch_size, rounds,
+                                       algorithm.local_steps, seed,
+                                       e_axis=algorithm.combine == "mean",
+                                       cohort_size=cohort)
+    if mesh is not None:
+        ndev = mesh.shape[mesh.axis_names[0]]
+        pad = (-cohort) % ndev
+        if pad:
+            # pad the cohort to a device multiple with the sentinel id I
+            # (zero round weight, writes dropped) so D ∤ S still runs —
+            # S = 1 on a 2-device mesh included
+            cohorts = np.concatenate(
+                [cohorts,
+                 np.full((rounds, pad), part.num_clients, np.int64)], 1)
+            widths = [(0, 0), (0, pad)] + [(0, 0)] * (schedule.ndim - 2)
+            schedule = np.pad(schedule, widths)
+    cohort_dev = jnp.asarray(cohorts, jnp.int32)             # one transfer
     idx_dev = jnp.asarray(schedule, jnp.int32)               # one transfer
     x_train = _staged(data.x_train)
     y_train = _staged(data.y_train)
@@ -508,8 +571,7 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
     measure = evaluator(task, data, eval_samples)
     ledger = compression_mod.round_bytes(algorithm, aggregation, compressor,
                                          params, part.num_clients)
-    hist = History(_uplink_floats=algorithm.uplink_floats(params),
-                   uplink_bytes_per_round=ledger.uplink_total,
+    hist = History(uplink_bytes_per_round=ledger.uplink_total,
                    downlink_bytes_per_round=ledger.downlink_total,
                    comm=ledger.as_dict())
     t0 = time.time()
@@ -518,17 +580,19 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
         n = min(eval_every, rounds - done)
         ts = jnp.arange(done + 1, done + n + 1, dtype=jnp.int32)
         with warnings.catch_warnings():
-            # the donated int32 schedule chunk has no same-shaped output
-            # to alias into (params/state do), so XLA notes it unusable
-            # on every compile; the filter is pinned to int32 arrays so a
-            # real params/state (float) donation failure still surfaces
+            # the donated int32 cohort/schedule chunks have no
+            # same-shaped output to alias into (params/state do), so XLA
+            # notes them unusable on every compile; the filter is pinned
+            # to int32 arrays so a real params/state (float) donation
+            # failure still surfaces
             warnings.filterwarnings(
                 "ignore",
                 message=r"Some donated buffers were not usable: "
                         r"ShapedArray\(int32")
             params, state, cstate = run_chunk(
                 params, state, cstate, x_train, y_train, weights,
-                key_data, idx_dev[done:done + n], ts)
+                key_data, cohort_dev[done:done + n],
+                idx_dev[done:done + n], ts)
         done += n
         metrics = algorithm.round_metrics(state)
         record(hist, done, measure, params,

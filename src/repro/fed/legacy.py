@@ -73,8 +73,7 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
 
     state = ssca.init(params)
     measure = evaluator(data, eval_samples)
-    hist = History(_uplink_floats=sum(
-        int(np.prod(w.shape)) for w in jax.tree.leaves(params)))
+    hist = History()
     t0 = time.time()
     for t in range(1, rounds + 1):
         batch = _round_batch(data, part, batch_size, t, seed)
@@ -99,8 +98,7 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
     one_round = jax.jit(constrained.round_fn(_weighted_ce_sum, limit_u, hp))
     state = constrained.init(params)
     measure = evaluator(data, eval_samples)
-    hist = History(_uplink_floats=sum(
-        int(np.prod(w.shape)) for w in jax.tree.leaves(params)) + 1)
+    hist = History()
     t0 = time.time()
     for t in range(1, rounds + 1):
         batch = _round_batch(data, part, batch_size, t, seed)
@@ -128,8 +126,7 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha))
     one_round = jax.jit(fedavg.fedsgd_round(loss, hp))
     measure = evaluator(data, eval_samples)
-    hist = History(_uplink_floats=sum(
-        int(np.prod(w.shape)) for w in jax.tree.leaves(params)))
+    hist = History()
     t0 = time.time()
     for t in range(1, rounds + 1):
         x, y, w = _round_batch(data, part, batch_size, t, seed)
@@ -164,8 +161,7 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
     one_round = jax.jit(fedavg.fedavg_round(loss, hp))
     cw = jnp.asarray(part.sizes / part.total, jnp.float32)
     measure = evaluator(data, eval_samples)
-    hist = History(_uplink_floats=sum(
-        int(np.prod(w.shape)) for w in jax.tree.leaves(params)))
+    hist = History()
     t0 = time.time()
     for t in range(1, rounds + 1):
         xs, ys = [], []

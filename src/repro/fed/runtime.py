@@ -20,7 +20,14 @@ hidden width taken from the legacy ``hidden=`` kwarg and input/label
 dims inferred from the data) plus ``aggregation=`` / ``compressor=`` /
 ``mesh=``, so secure aggregation, partial participation, compressed
 uploads and client-mesh sharding work for all four algorithms × all
-tasks — including secure Algorithm 2, per the paper's §III-B.
+tasks — including secure Algorithm 2, per the paper's §III-B.  The
+engine underneath is cohort-native: with a partial-participation
+strategy (``aggregation.sampled(S)`` / ``secure(num_sampled=S)``) every
+per-round cost — batch gathers, uploads, masking, mesh shards, wire
+bytes — is O(S) in the cohort, so ``I=10_000, S=8`` runs at the cost of
+a 8-client round on the same hardware (see
+:mod:`repro.fed.engine` and the README's "Scaling the client
+population").
 
 The mini-batch schedule is shared across algorithms (same seed ⇒ same
 sample draws) so convergence comparisons are paired.  The seed's

@@ -61,11 +61,16 @@ def shard_map_fn(f, mesh, in_specs, out_specs):
 def make_client_mesh(num_shards: int = 0):
     """1-D mesh over the federated-client axis for the sharded engine.
 
-    Each of the ``num_shards`` devices owns I / num_shards clients of the
-    round: uploads are computed shard-locally and the server aggregate is
-    one psum over ``clients`` (the paper's Σ_i, lowered hierarchically by
-    XLA exactly like the (`pod`,`data`) reduction of the production
-    mesh).  ``num_shards=0`` uses every local device.
+    The engine shards each round's **participating cohort** (S clients)
+    over this mesh — not the population: each of the ``num_shards``
+    devices owns S / num_shards cohort slots of the round, uploads are
+    computed shard-locally and the server aggregate is one psum over
+    ``clients`` (the paper's Σ_i, lowered hierarchically by XLA exactly
+    like the (`pod`,`data`) reduction of the production mesh).  The
+    population size I never constrains the mesh — ``I=10_000, S=8`` runs
+    on the same 2-device mesh as ``I=16`` — and cohorts are sentinel-
+    padded up to a device multiple when num_shards ∤ S.
+    ``num_shards=0`` uses every local device.
     """
     n = num_shards or jax.local_device_count()
     return make_mesh((n,), ("clients",))

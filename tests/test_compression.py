@@ -267,12 +267,10 @@ def test_history_ledger_populated(dataset, fed_partition):
     np.testing.assert_array_equal(
         h.cum_uplink_bytes,
         [r * h.uplink_bytes_per_round for r in h.rounds])
-    # deprecated field: still populated (float32-dense element count),
-    # but reading it now warns ahead of removal
-    with pytest.warns(DeprecationWarning, match="uplink_bytes_per_round"):
-        floats = h.uplink_floats_per_round
-    assert floats == h.comm["breakdown"]["upload_elements"]
-    assert h.as_dict()["uplink_floats_per_round"] == floats  # no warn path
+    # the deprecated float32-dense uplink_floats_per_round finished its
+    # removal cycle: the field, the warning and the serialized key are gone
+    assert not hasattr(h, "uplink_floats_per_round")
+    assert "uplink_floats_per_round" not in h.as_dict()
 
 
 def test_construction_validation():

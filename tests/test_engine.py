@@ -7,8 +7,9 @@ Covers the refactor's contracts:
 * secure aggregation is bitwise-identical to the plain sum on
   grid-aligned messages (mask cancellation in Z_{2^32} is exact) and
   works for Algorithm 2's (value, gradient) upload;
-* partial-participation round weights are unbiased (sum-combine) and
-  exactly normalized (mean-combine);
+* partial-participation cohort weights are unbiased (sum-combine) and
+  exactly normalized (mean-combine), computed from the gathered cohort
+  (see tests/test_population.py for the population-scale contracts);
 * the fused Pallas server update matches the tree-map reference;
 * the vectorized batch scheduler is seed-stable and shard-respecting.
 """
@@ -133,24 +134,28 @@ def test_secure_quantization_error_bounded():
 
 
 @pytest.mark.parametrize("combine", ["sum", "mean"])
-def test_sampled_round_weights_unbiased(combine):
-    """Σ weights behave correctly under client sampling: sum-combine round
-    weights are unbiased for the full weights (E[λ'] = λ); mean-combine
+def test_sampled_cohort_weights_unbiased(combine):
+    """Cohort reweighting behaves correctly over the sampling stream:
+    sum-combine cohort weights are unbiased for the full weights
+    (E[λ'] = λ when scattered back to client slots); mean-combine
     weights re-normalize to Σ = 1 exactly every round."""
     n, s = 8, 3
-    weights = jnp.asarray(np.random.default_rng(0).dirichlet(np.ones(n)),
-                          jnp.float32)
+    weights = np.random.default_rng(0).dirichlet(
+        np.ones(n)).astype(np.float32)
     strat = aggregation.sampled(s)
-    keys = jax.random.split(jax.random.key(0), 4096)
-    rws = jax.vmap(lambda k: strat.round_weights(weights, k, combine))(keys)
-    counts = (rws > 0).sum(1)
-    np.testing.assert_array_equal(np.asarray(counts), s)     # exactly S
+    cohorts = partition.sample_cohorts(n, s, np.arange(1, 4097), seed=0)
+    rws = jax.vmap(
+        lambda w: strat.cohort_weights(w, combine, n)
+    )(jnp.asarray(weights[cohorts]))                         # (T, S)
+    assert rws.shape == (4096, s)                            # exactly S
+    assert bool((rws > 0).all())
     if combine == "mean":
         np.testing.assert_allclose(np.asarray(rws.sum(1)), 1.0, atol=1e-5)
     else:
-        # Monte-Carlo mean of λ' ≈ λ (unbiased estimator of the full sum)
-        np.testing.assert_allclose(np.asarray(rws.mean(0)),
-                                   np.asarray(weights), rtol=0.15)
+        # scatter λ' back to client slots; Monte-Carlo mean ≈ λ
+        full = np.zeros((len(cohorts), n), np.float32)
+        np.put_along_axis(full, cohorts, np.asarray(rws), axis=1)
+        np.testing.assert_allclose(full.mean(0), weights, rtol=0.15)
 
 
 def test_secure_and_sampled_run_all_four_algorithms(dataset, fed_partition):
@@ -212,8 +217,9 @@ def test_sampled_full_participation_matches_plain_bitwise(dataset,
     weights = jnp.asarray(
         np.random.default_rng(1).dirichlet(np.ones(n)), jnp.float32)
     full = aggregation.sampled(n)
+    assert full.cohort_size(n) == n
     for combine in ("sum", "mean"):
-        rw = full.round_weights(weights, jax.random.key(0), combine)
+        rw = full.cohort_weights(weights, combine, n)
         np.testing.assert_array_equal(np.asarray(rw), np.asarray(weights))
     kw = dict(batch_size=10, rounds=5, eval_every=5, eval_samples=300,
               seed=2)
@@ -228,25 +234,25 @@ def test_sampled_full_participation_matches_plain_bitwise(dataset,
 
 
 def test_sampled_single_client(dataset, fed_partition):
-    """S = 1: exactly one client per round, sum-combine weight rescaled
+    """S = 1: a one-client cohort per round, sum-combine weight rescaled
     by I (unbiased), mean-combine weight exactly 1; the engine runs and
     learns finitely."""
     n = 8
-    weights = jnp.asarray(
-        np.random.default_rng(2).dirichlet(np.ones(n)), jnp.float32)
+    weights = np.random.default_rng(2).dirichlet(
+        np.ones(n)).astype(np.float32)
     one = aggregation.sampled(1)
-    keys = jax.random.split(jax.random.key(3), 64)
+    cohorts = partition.sample_cohorts(n, 1, np.arange(1, 65), seed=3)
+    assert len(np.unique(cohorts)) > 1               # the cohort rotates
     for combine, check in (
             ("sum", lambda rw, i: np.testing.assert_allclose(
-                rw[i], weights[i] * n, rtol=1e-6)),
-            ("mean", lambda rw, i: np.testing.assert_allclose(
-                rw[i], 1.0, rtol=1e-6))):
-        rws = jax.vmap(lambda k: one.round_weights(weights, k, combine)
-                       )(keys)
-        for rw in np.asarray(rws):
-            (idx,) = np.nonzero(rw)
-            assert len(idx) == 1
-            check(rw, idx[0])
+                rw, weights[i] * n, rtol=1e-6)),
+            ("mean", lambda rw, i: np.testing.assert_array_equal(
+                rw, 1.0))):                          # w/w is exactly 1
+        for (cid,) in cohorts:
+            rw = np.asarray(one.cohort_weights(
+                jnp.asarray(weights[[cid]]), combine, n))
+            assert rw.shape == (1,)
+            check(rw[0], cid)
     for fn, kw in ((runtime.run_alg1, {}),
                    (runtime.run_fedavg, {"lr_a": 2.0})):
         _, h = fn(dataset, fed_partition, batch_size=10, rounds=4,
@@ -256,11 +262,12 @@ def test_sampled_single_client(dataset, fed_partition):
 
 
 def test_sampled_out_of_range_rejected():
-    weights = jnp.ones((4,), jnp.float32) / 4
     for bad in (0, 5, -1):
         with pytest.raises(ValueError, match="out of range"):
-            aggregation.sampled(bad).round_weights(
-                weights, jax.random.key(0), "sum")
+            aggregation.sampled(bad).cohort_size(4)
+    # the engine validates eagerly, before any schedule is drawn
+    with pytest.raises(ValueError, match="out of range"):
+        aggregation.secure(num_sampled=9).cohort_size(4)
 
 
 # ---------------------------------------------------------------------------
@@ -334,8 +341,8 @@ def test_sample_schedule_within_shard_no_replacement():
 def test_sample_schedule_small_client_replacement():
     """Clients with N_i < B sample with replacement (full coverage)."""
     idx = [np.arange(3), np.arange(3, 103)]
-    part = partition.Partition([np.asarray(i, np.int64) for i in idx],
-                               np.asarray([3, 100], np.int64))
+    part = partition.Partition.from_indices(
+        [np.asarray(i, np.int64) for i in idx])
     sched = partition.sample_schedule(part, 10, [1], seed=0)
     assert np.isin(sched[0, 0], idx[0]).all()
     assert np.isin(sched[0, 1], idx[1]).all()

@@ -1,0 +1,369 @@
+"""Population-scale contracts of the cohort-native engine.
+
+The engine's per-round cost must be O(S) in the participating cohort,
+never O(I) in the client population:
+
+* **index memory** — the schedule is (T, S) cohorts + (T, S, B) batch
+  indices; the old (T·E, I, B) tensor is gone, and building the
+  schedule at I=10_000, S=8, rounds=50 stays under a fixed budget;
+* **cohort stream** — seed-stable, sorted, uniform S-subsets, drawn on
+  an rng stream independent of the batch draw;
+* **unbiasedness** (hypothesis) — the expected cohort aggregate over
+  the sampling stream equals the full-participation aggregate;
+* **masked-reference equivalence** — a compressed cohort run at I ≫ S
+  (qsgd, and top-k with error feedback) reproduces a masked
+  full-population reference round loop *bit-for-bit*: same per-client
+  batches, same per-client PRF streams, same residual evolution, and a
+  cohort sum whose terms are the masked sum's nonzero terms in the same
+  (ascending-client-id) order;
+* a ``slow``-marked **10 000-client sampled smoke** through the real
+  engine: the round body at I=10k/S=8 does the work of an 8-client
+  round.
+"""
+import tracemalloc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocol, ssca
+from repro.core.schedules import paper_schedules
+from repro.data import partition, synthetic
+from repro.fed import aggregation, compression, engine, runtime
+from repro.fed.tasks.base import SumLoss
+from repro.fed.tasks.mlp import MLPTask
+
+
+# ---------------------------------------------------------------------------
+# index memory: the (T·E, I, B) path is gone (satellite: regression)
+# ---------------------------------------------------------------------------
+
+def test_cohort_schedule_index_memory_is_o_of_s():
+    """I=10_000, S=8, rounds=50: resident schedule bytes are O(T·S·B)
+    and the *peak* host allocation while building it stays far under the
+    old (T, I, B) tensor — the full-population index path cannot have
+    been materialized."""
+    i, s, b, t = 10_000, 8, 10, 50
+    part = partition.iid(40_000, i, seed=0)
+    tracemalloc.start()
+    try:
+        cohorts, idx = engine.build_schedule(
+            part, b, t, 1, seed=0,
+            cohort_size=aggregation.sampled(s).cohort_size(i))
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    assert cohorts.shape == (t, s)
+    assert idx.shape == (t, s, b)
+    assert cohorts.nbytes + idx.nbytes < 64 * 1024      # resident: O(T·S·B)
+    old_path_bytes = t * i * b * 8                      # (T, I, B) int64
+    assert peak < old_path_bytes // 4, (peak, old_path_bytes)
+    assert peak < 8 * 1024 * 1024, peak                 # fixed budget
+
+
+def test_skewed_partition_schedule_memory_bounded():
+    """A pathologically skewed population (one client holding 100k
+    samples among 5000 tiny clients) must not blow the host transient:
+    the per-round key/pad draw is processed in client blocks bounded by
+    ``partition._BLOCK_ELEMS`` elements, so peak memory is O(block·width)
+    — not O(I·width), which here would be ~4 GB-scale at full I."""
+    hot = np.arange(100_000)
+    smalls = [100_000 + 4 * j + np.arange(4) for j in range(4999)]
+    part = partition.Partition.from_indices(
+        [hot] + [np.asarray(ix, np.int64) for ix in smalls])
+    i, s, b, t = part.num_clients, 8, 4, 5
+    assert int(part.sizes.max()) == 100_000             # width = 100k
+    tracemalloc.start()
+    try:
+        cohorts, idx = engine.build_schedule(part, b, t, 1, seed=0,
+                                             cohort_size=s)
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    assert idx.shape == (t, s, b)
+    # unblocked, keys alone would be I·width·4 = 2 GB per round; the
+    # block budget keeps the whole build under a fixed ceiling
+    assert peak < 64 * 1024 * 1024, peak
+    # draws still land inside each client's shard
+    for r in range(t):
+        for p_, cid in enumerate(cohorts[r]):
+            lo = part.offsets[cid]
+            assert np.isin(idx[r, p_],
+                           part.flat[lo:lo + part.sizes[cid]]).all()
+
+
+def test_e_axis_cohort_schedule_shape():
+    """Mean-combine schedules keep the E axis but stay cohort-sized."""
+    part = partition.iid(1000, 100, seed=0)
+    cohorts, idx = engine.build_schedule(part, 4, rounds=3, local_steps=2,
+                                         seed=1, e_axis=True, cohort_size=5)
+    assert cohorts.shape == (3, 5)
+    assert idx.shape == (3, 5, 2, 4)
+    # the round's cohort is shared by its E local steps: every local
+    # step's rows index into the same 5 clients' shards
+    for r in range(3):
+        for p, cid in enumerate(cohorts[r]):
+            lo = part.offsets[cid]
+            hi = lo + part.sizes[cid]
+            assert np.isin(idx[r, p],
+                           part.flat[lo:hi]).all(), (r, p, cid)
+
+
+# ---------------------------------------------------------------------------
+# the cohort sampling stream
+# ---------------------------------------------------------------------------
+
+def test_sample_cohorts_sorted_unique_seed_stable():
+    co1 = partition.sample_cohorts(100, 10, [1, 2, 3], seed=7)
+    co2 = partition.sample_cohorts(100, 10, [1, 2, 3], seed=7)
+    np.testing.assert_array_equal(co1, co2)              # deterministic
+    # random access: each round's draw depends only on (seed, t)
+    np.testing.assert_array_equal(
+        co1[1], partition.sample_cohorts(100, 10, [2], seed=7)[0])
+    for row in co1:
+        assert (np.diff(row) > 0).all()                  # sorted, unique
+        assert row.min() >= 0 and row.max() < 100
+    assert not np.array_equal(co1[0], co1[1])            # distinct rounds
+    assert not np.array_equal(
+        co1, partition.sample_cohorts(100, 10, [1, 2, 3], seed=8))
+
+
+def test_sample_cohorts_identity_at_full_participation():
+    co = partition.sample_cohorts(6, 6, [1, 2], seed=3)
+    np.testing.assert_array_equal(co, np.tile(np.arange(6), (2, 1)))
+
+
+def test_cohort_draw_does_not_perturb_batch_stream():
+    """The cohort rng stream is independent of the batch draw: the
+    cohort schedule is a row-selection of the full-participation
+    schedule, bit for bit."""
+    part = partition.iid(500, 20, seed=0)
+    ids = np.asarray([1, 5, 9])
+    full = partition.sample_schedule(part, 8, ids, seed=11)
+    co = partition.sample_cohorts(20, 4, ids, seed=11)
+    sub = partition.sample_schedule(part, 8, ids, seed=11, cohorts=co)
+    for k in range(len(ids)):
+        np.testing.assert_array_equal(sub[k], full[k][co[k]])
+
+
+def test_sample_cohorts_out_of_range():
+    for bad in (0, -1, 11):
+        with pytest.raises(ValueError, match="out of range"):
+            partition.sample_cohorts(10, bad, [1])
+
+
+# ---------------------------------------------------------------------------
+# unbiasedness over the sampling stream (satellite: hypothesis property)
+# ---------------------------------------------------------------------------
+
+def test_cohort_aggregate_unbiased_property():
+    hyp = pytest.importorskip("hypothesis")
+    given, settings, st = hyp.given, hyp.settings, hyp.strategies
+
+    @given(i=st.integers(3, 12), frac=st.floats(0.15, 0.9),
+           seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=12, deadline=None)
+    def check(i, frac, seed):
+        """E over the cohort stream of Σ_{p∈cohort} λ'_p m_p equals the
+        full-participation aggregate Σ_i λ_i m_i (λ' from the actual
+        SampledClients cohort reweighting)."""
+        s = max(1, int(round(frac * i)))
+        rng = np.random.default_rng(seed)
+        weights = rng.dirichlet(np.ones(i)).astype(np.float32)
+        msgs = rng.normal(size=(i, 6)).astype(np.float32)
+        rounds = 1500
+        cohorts = partition.sample_cohorts(
+            i, s, np.arange(1, rounds + 1), seed)
+        strat = aggregation.sampled(s)
+        rw = jax.vmap(
+            lambda w: strat.cohort_weights(w, "sum", i)
+        )(jnp.asarray(weights[cohorts]))                 # (rounds, S)
+        # the expectation is over the sampling stream — accumulate it in
+        # f64 so Monte-Carlo noise, not f32 summation error, is what the
+        # band measures (λ' itself stays the strategy's f32 output; at
+        # s = i the cohort is the identity and err is exactly 0)
+        msgs64 = msgs.astype(np.float64)
+        full = (weights.astype(np.float64)[:, None] * msgs64).sum(0)
+        aggs = (np.asarray(rw, np.float64)[:, :, None]
+                * msgs64[cohorts]).sum(1)
+        err = np.abs(aggs.mean(0) - full)
+        mc_band = 6.0 * aggs.std(0) / np.sqrt(rounds) + 1e-6
+        assert (err <= mc_band).all(), (err, mc_band)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# the masked full-population reference (acceptance: bit-for-bit at I >> S)
+# ---------------------------------------------------------------------------
+
+def _masked_reference_run(data, part, comp, s, *, batch_size, rounds,
+                          hidden, seed, secure=False):
+    """The pre-cohort formulation: every one of the I clients computes,
+    compresses and uploads, with the I−S non-participants' messages
+    masked to zero and their residuals frozen.  Reproduces the
+    runtime ``run_alg1(aggregation=sampled(S)/secure(num_sampled=S),
+    compressor=comp)`` semantics exactly.  With ``secure=True`` the
+    masked messages go through full-population Z_{2^32} pairwise-masked
+    aggregation (I participants, I−S of them uploading exact zeros)."""
+    i = part.num_clients
+    k_in, l_out = data.x_train.shape[1], data.y_train.shape[1]
+    task = MLPTask(k=k_in, hidden=hidden, l=l_out)
+    rho, gamma = paper_schedules(batch_size)
+    hp = ssca.SSCAHyperParams(tau=0.1, lam=1e-5, rho=rho, gamma=gamma)
+    alg = protocol.SSCAUnconstrained(loss_fn=SumLoss(task), hp=hp)
+
+    params = jax.tree.map(jnp.array, task.init_params(jax.random.key(seed)))
+    state = alg.init_state(params)
+    x = jnp.asarray(data.x_train)
+    y = jnp.asarray(data.y_train)
+    weights = jnp.asarray(alg.client_weights(part, batch_size), jnp.float32)
+    cstate = comp.init_client_state(
+        engine._upload_avals(alg, x, y, batch_size, params), i)
+    session_key = jax.random.key(seed + 10_000)
+    cohorts = partition.sample_cohorts(i, s, np.arange(1, rounds + 1), seed)
+
+    # one jitted round, like the engine's scan body: eager dispatch
+    # fuses differently from XLA (≈1-ulp gradient differences), so a
+    # bit-for-bit reference must be compiled too
+    @jax.jit
+    def one_round(params, state, cstate, idx, mask, t):
+        key_t = jax.random.fold_in(session_key, t)
+        rw = mask * weights * (i / s)
+        ws = jnp.broadcast_to(rw[:, None], idx.shape)
+        raw = jax.vmap(alg.client_upload,
+                       in_axes=(None, None, 0))(params, state,
+                                                (x[idx], y[idx], ws))
+        kd = jax.random.key_data(key_t).reshape(-1).astype(jnp.uint32)
+        k0, k1 = kd[0], kd[-1]
+        out, new_res = jax.vmap(
+            lambda m, r, c: comp.compress(m, r, k0, k1, c)
+        )(raw, cstate, jnp.arange(i, dtype=jnp.uint32))
+        live = mask != 0
+
+        def _sel(new, old):
+            m = live.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        out = jax.tree.map(lambda c: _sel(c, jnp.zeros_like(c)), out)
+        cstate = jax.tree.map(_sel, new_res, cstate)
+        if secure:
+            agg = aggregation.secure().combine_messages(out, key_t)
+        else:
+            agg = jax.tree.map(lambda m: jnp.sum(m, axis=0), out)
+        params, state = alg.server_step(params, state, agg)
+        return params, state, cstate
+
+    for t in range(1, rounds + 1):
+        idx = jnp.asarray(
+            partition.sample_minibatches(part, batch_size, t, seed),
+            jnp.int32)                                   # (I, B) — full
+        mask = np.zeros((i,), np.float32)
+        mask[cohorts[t - 1]] = 1.0
+        params, state, cstate = one_round(params, state, cstate, idx,
+                                          jnp.asarray(mask),
+                                          jnp.int32(t))
+    return params, cstate
+
+
+@pytest.mark.parametrize("comp", [compression.qsgd(8),
+                                  compression.topk(0.25, bits=8)],
+                         ids=["qsgd8", "topk25_8b_ef"])
+def test_cohort_run_matches_masked_full_population_bitwise(comp):
+    """qsgd / top-k+error-feedback at I ≫ S under secure aggregation:
+    the cohort-native engine's trajectory is *bit-identical* to the
+    masked full-population reference — per-client PRF streams key on
+    global client ids, residuals of non-participants never move, the
+    non-participants' masked uploads quantize to exact-zero ring
+    elements, and Z_{2^32} addition is exactly associative, so the
+    S-member cohort aggregate equals the I-member masked aggregate bit
+    for bit (cohort masking over S positions vs full masking over I
+    positions both cancel exactly)."""
+    i, s, b, t, hidden, seed = 16, 4, 5, 4, 16, 5
+    data = synthetic.classification_dataset(n_train=320, n_test=64,
+                                            k=36, l=4, seed=0)
+    part = partition.iid(320, i, seed=0)
+    p_eng, _ = runtime.run_alg1(
+        data, part, batch_size=b, rounds=t, eval_every=t, eval_samples=64,
+        hidden=hidden, seed=seed,
+        aggregation=aggregation.secure(num_sampled=s), compressor=comp)
+    p_ref, _ = _masked_reference_run(data, part, comp, s, batch_size=b,
+                                     rounds=t, hidden=hidden, seed=seed,
+                                     secure=True)
+    for a, rr in zip(jax.tree.leaves(p_eng), jax.tree.leaves(p_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(rr))
+
+
+@pytest.mark.parametrize("comp", [compression.qsgd(8),
+                                  compression.topk(0.25, bits=8)],
+                         ids=["qsgd8", "topk25_8b_ef"])
+def test_cohort_run_matches_masked_reference_plain_sum(comp):
+    """The plain-aggregation counterpart: per-client messages and
+    residual evolution are identical (the secure case above proves them
+    bit-exact); the float cohort sum differs from the masked
+    full-population sum only by XLA's reduction reassociation between an
+    (S, ·) and an (I, ·) reduce — a few ulps, pinned here."""
+    i, s, b, t, hidden, seed = 16, 4, 5, 4, 16, 5
+    data = synthetic.classification_dataset(n_train=320, n_test=64,
+                                            k=36, l=4, seed=0)
+    part = partition.iid(320, i, seed=0)
+    p_eng, _ = runtime.run_alg1(
+        data, part, batch_size=b, rounds=t, eval_every=t, eval_samples=64,
+        hidden=hidden, seed=seed, aggregation=aggregation.sampled(s),
+        compressor=comp)
+    p_ref, _ = _masked_reference_run(data, part, comp, s, batch_size=b,
+                                     rounds=t, hidden=hidden, seed=seed)
+    for a, rr in zip(jax.tree.leaves(p_eng), jax.tree.leaves(p_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(rr),
+                                   rtol=0, atol=1e-6)
+
+
+def test_cohort_residuals_of_nonparticipants_never_move():
+    """Error-feedback state is population-resident: after a sampled run,
+    exactly the clients that were never drawn keep an all-zero residual
+    (scatter-back touches cohort rows only)."""
+    i, s, b, t, seed = 16, 3, 5, 6, 9
+    data = synthetic.classification_dataset(n_train=320, n_test=64,
+                                            k=36, l=4, seed=0)
+    part = partition.iid(320, i, seed=0)
+    comp = compression.topk(0.25)
+    _, cstate = _masked_reference_run(data, part, comp, s, batch_size=b,
+                                      rounds=t, hidden=16, seed=seed)
+    drawn = np.unique(partition.sample_cohorts(
+        i, s, np.arange(1, t + 1), seed))
+    never = np.setdiff1d(np.arange(i), drawn)
+    assert len(never) > 0                                # I >> S·T coverage
+    res = np.asarray(jax.tree.leaves(cstate)[0])
+    for c in never:
+        assert np.all(res[c] == 0.0), c
+    assert np.any(res[drawn[0]] != 0.0)                  # participants moved
+
+
+# ---------------------------------------------------------------------------
+# 10k-client sampled smoke (satellite: slow CI job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_population_10k_sampled_smoke():
+    """I=10_000 clients, S=8 cohort: the engine runs real rounds with
+    O(S) round cost and an S-upload wire ledger."""
+    i, s = 10_000, 8
+    data = synthetic.classification_dataset(n_train=20_000, n_test=500,
+                                            seed=0)
+    part = partition.iid(20_000, i, seed=0)
+    _, h = runtime.run_alg1(data, part, batch_size=8, rounds=3,
+                            eval_every=3, eval_samples=200, hidden=16,
+                            seed=0, aggregation=aggregation.sampled(s))
+    assert np.isfinite(h.train_cost[-1])
+    assert h.comm["participants"] == s
+    assert h.uplink_bytes_per_round == s * h.comm["uplink_per_client"]
+    # secure masking over the cohort members only: the per-peer seed
+    # overhead counts S−1 peers, not I−1
+    _, hs = runtime.run_alg1(data, part, batch_size=8, rounds=2,
+                             eval_every=2, eval_samples=200, hidden=16,
+                             seed=0,
+                             aggregation=aggregation.secure(num_sampled=s))
+    assert np.isfinite(hs.train_cost[-1])
+    assert hs.comm["participants"] == s
+    assert hs.comm["breakdown"]["wire_overhead_bytes"] == 4 * (s - 1)

@@ -121,10 +121,15 @@ def test_history_metric_views_alias_metrics_dict():
     assert set(h.metrics) == {"train_cost"}
 
 
-def test_uplink_floats_read_warns():
-    h = engine.History(_uplink_floats=7)
-    with pytest.warns(DeprecationWarning, match="uplink_bytes_per_round"):
-        assert h.uplink_floats_per_round == 7
+def test_uplink_floats_removed():
+    """The deprecated float32-dense wire model is gone for good: no
+    field, no constructor kwarg, no serialized key — the byte ledger is
+    the only wire accounting."""
+    h = engine.History()
+    assert not hasattr(h, "uplink_floats_per_round")
+    assert "uplink_floats_per_round" not in h.as_dict()
+    with pytest.raises(TypeError):
+        engine.History(_uplink_floats=7)
 
 
 @pytest.mark.slow
