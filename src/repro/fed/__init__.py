@@ -8,9 +8,12 @@ single-host wrappers, and mesh-sharded execution.
 * :mod:`repro.fed.aggregation` — plain / secure / sampled-client combine.
 * :mod:`repro.fed.compression` — identity / qsgd / top-k upload
   compression with error feedback, plus the per-round byte ledger.
+* :mod:`repro.fed.sketch`      — count-sketch uploads: the sublinear
+  *secure* wire (sketches merge linearly under Z_{2^32} masking).
 * :mod:`repro.fed.runtime`     — the four paper algorithms as thin
   task-parametric wrappers (MLP task by default).
 * :mod:`repro.fed.legacy`      — the seed per-round drivers (reference).
 * :mod:`repro.fed.secure`      — float-mask secure-agg reference impl.
 """
-from repro.fed import aggregation, compression, engine, tasks  # noqa: F401
+from repro.fed import (aggregation, compression, engine,  # noqa: F401
+                       sketch, tasks)

@@ -68,10 +68,13 @@ implementations:
   generation and the signed Z_{2^32} accumulate fused in one pass over
   the message (Pallas kernel on TPU, masks generated in VMEM; XLA
   elsewhere).  O(S·model) traffic, nothing pair-shaped ever touches HBM.
-* ``streaming=False`` — the reference path: all P = S(S−1)/2 pair masks
-  materialized as model-sized tensors and combined by a signed
-  tensordot.  O(P·model) traffic; kept as the numerical reference and
-  the benchmark baseline.
+* ``streaming=False`` — the retired reference path: all P = S(S−1)/2
+  pair masks materialized as model-sized tensors and combined by a
+  signed tensordot.  O(P·model) traffic; it lives with the kernel
+  oracles (:func:`repro.kernels.ref.secure_masked_combine`) and is
+  imported lazily only when explicitly requested, so the hot path never
+  loads it.  Kept as the bit-exactness reference and the benchmark
+  baseline.
 
 Both return bit-identical aggregates (mod-2^32 addition is exactly
 associative/commutative), so the choice is purely a performance axis.
@@ -79,7 +82,6 @@ associative/commutative), so the choice is purely a performance axis.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional, Protocol, runtime_checkable
 
 import jax
@@ -87,7 +89,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as _kops
-from repro.kernels import secure_agg as _sa
 
 PyTree = Any
 
@@ -225,21 +226,6 @@ class SampledClients(_LinearCombine):
         return int(self.num_sampled)
 
 
-@functools.lru_cache(maxsize=32)
-def _pair_structure(n: int):
-    """Static per-cohort-size pair layout for the reference masked path:
-    the P = n(n−1)/2 (lo, hi) index vectors and the (n, P) ±1 sign
-    matrix.  Cached so repeated traces (multi-seed sweeps, sharded
-    re-traces) reuse one set of host arrays instead of rebuilding them
-    per trace."""
-    lo, hi = np.triu_indices(n, k=1)
-    signs = np.zeros((n, len(lo)), np.int32)
-    signs[lo, np.arange(len(lo))] = 1
-    signs[hi, np.arange(len(lo))] = -1
-    return (np.asarray(lo, np.uint32), np.asarray(hi, np.uint32),
-            signs)
-
-
 @dataclasses.dataclass(frozen=True)
 class SecureAggregation:
     """Pairwise-masked aggregation in Z_{2^32} (Bonawitz et al., 2017;
@@ -309,14 +295,17 @@ class SecureAggregation:
     def uplink_wire_bytes(self, payload_bytes: int, dense_elements: int,
                           num_clients: int) -> int:
         """Masked uploads travel as the *dense* Z_{2^32} ring element —
-        4 bytes per message entry regardless of the compressor (a sparse
+        4 bytes per masked entry regardless of the compressor (a sparse
         or b-bit payload cannot stay sparse/narrow under one-time-pad
         masking without revealing the support or the range), plus one
         4-byte pair-seed share per cohort peer per round.  Compression
         still shapes the message *content* (and quantized-on-grid
         uploads make the masked aggregate exact); shrinking secure wire
-        bytes needs dimension reduction before masking, which is out of
-        scope."""
+        bytes needs dimension reduction before masking — which is what
+        :mod:`repro.fed.sketch` does: ``dense_elements`` arrives as the
+        compressor's declared masked dimension (``wire_elements``), so a
+        sketched upload is charged per sketch bucket, sublinear in the
+        model."""
         del payload_bytes
         peers = self.cohort_size(num_clients) - 1
         return 4 * dense_elements + 4 * peers
@@ -336,42 +325,10 @@ class SecureAggregation:
         if self.streaming:
             return self.finalize_combine(
                 self.partial_combine(wmsgs, key, 0, n))
-        return self._combine_reference(wmsgs, key, n)
-
-    def _combine_reference(self, wmsgs, key, n):
-        """The PR-1 mask-materializing path: every pair mask built as a
-        full leaf-sized tensor, combined by a signed tensordot.  Kept as
-        the numerical reference and the ``bench_all`` baseline."""
-        leaves, treedef = jax.tree_util.tree_flatten(jax.tree.map(
-            lambda m: _sa.quantize(m, self.scale_bits), wmsgs))
-
-        if n > 1:
-            lo, hi, signs = _pair_structure(n)
-            signs = jnp.asarray(signs)
-            pair_keys = jax.vmap(
-                lambda a, b: jax.random.fold_in(jax.random.fold_in(key, a),
-                                                b)
-            )(jnp.asarray(lo), jnp.asarray(hi))
-            leaf_keys = jax.vmap(
-                lambda k: jax.random.split(k, len(leaves)))(pair_keys)
-
-            def _mask_and_sum(li, q):
-                # q: (S, ...) int32.  masks: (P, ...) uniform over Z_2^32.
-                bits = jax.vmap(
-                    lambda k: jax.random.bits(k, q.shape[1:], jnp.uint32)
-                )(leaf_keys[:, li])
-                masks = jax.lax.bitcast_convert_type(bits, jnp.int32)
-                # per-client mask totals: ±1 signed sum over pairs; int32
-                # overflow wraps (two's complement) — exactly Z_2^32.
-                per_client = jnp.tensordot(signs, masks, axes=1)
-                return jnp.sum(q + per_client, axis=0)       # server's sum
-
-            agg_q = [_mask_and_sum(li, q) for li, q in enumerate(leaves)]
-        else:
-            agg_q = [jnp.sum(q, axis=0) for q in leaves]
-
-        agg = [_sa.dequantize(a, self.scale_bits) for a in agg_q]
-        return jax.tree_util.tree_unflatten(treedef, agg)
+        # the retired O(P·model) mask-materializing path lives with the
+        # kernel oracles and is imported only when explicitly requested
+        from repro.kernels import ref as _ref
+        return _ref.secure_masked_combine(wmsgs, key, self.scale_bits)
 
 
 def plain() -> PlainAggregation:

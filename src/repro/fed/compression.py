@@ -312,17 +312,28 @@ def round_bytes(algorithm, aggregation, compressor, params,
       float wire (plain / sampled aggregation), or the dense Z_{2^32}
       ring representation + per-pair seed overhead under secure
       aggregation (:meth:`SecureAggregation.uplink_wire_bytes` — masking
-      hides the support, so sparsity saves nothing on the wire).
+      hides the support, so sparsity saves nothing on the wire).  A
+      compressor that *changes the masked dimension itself* — the
+      count-sketch of :mod:`repro.fed.sketch` is the one case — declares
+      it via ``wire_elements(dense_elements)``: the secure wire then
+      charges 4 bytes per *sketch* bucket, not per model entry, which is
+      exactly the sublinear-secure-wire claim the ledger has to witness.
     * downlink — the server's model broadcast, one dense copy of
-      ``params`` per participating client.
+      ``params`` per participating client, plus any compressor-declared
+      per-client extra (``extra_downlink_bytes``: e.g. the k unsketch
+      support indices clients need for their error-feedback debit).
     """
     comp = compressor if compressor is not None else identity()
     elements, leaves, elem_bytes = algorithm.upload_spec(params)
     payload = comp.payload_bytes(elements, leaves, elem_bytes)
-    per_client = aggregation.uplink_wire_bytes(payload, elements,
+    wire_el = comp.wire_elements(elements) \
+        if hasattr(comp, "wire_elements") else elements
+    per_client = aggregation.uplink_wire_bytes(payload, wire_el,
                                                num_clients)
     participants = aggregation.participants(num_clients)
     down = _param_bytes(params)
+    if hasattr(comp, "extra_downlink_bytes"):
+        down += comp.extra_downlink_bytes(elements)
     return RoundBytes(
         uplink_per_client=per_client,
         uplink_total=per_client * participants,
@@ -333,6 +344,7 @@ def round_bytes(algorithm, aggregation, compressor, params,
             "compressor": comp.name,
             "payload_bytes": payload,
             "upload_elements": elements,
+            "wire_elements": wire_el,
             "upload_leaves": leaves,
             "upload_elem_bytes": elem_bytes,
             "wire_overhead_bytes": per_client - payload,

@@ -320,6 +320,21 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
       weighted message λ'_i(ω^t + Δ̂_i) is reassembled afterwards;
       uncompressed messages are weighted directly.
 
+    A **sketched** compressor (:mod:`repro.fed.sketch`, marked by
+    ``sketched = True``) changes the wire *shape*, so it threads
+    differently, in two phases: the weighted message plus residual is
+    encoded into a (rows, cols) count-sketch per member and the
+    *sketches* are aggregated by the strategy (they are linear, so the
+    secure masked Z_{2^32} sum is the sketch of the summed update
+    bit-for-bit); the server ranks a top-k support from the aggregate
+    sketch, and the members' *exact* values at the broadcast support
+    travel as a second (k,)-shaped aggregation under a fresh mask key.
+    Each member then zeroes the support out of its own input — plain
+    top-k error feedback into the same (I, …) residual arena.  For
+    mean-combine the λ'_i weighting moves *before* the encode (the
+    sketch's bucket values must stay on the fixed-point grid), and the
+    aggregate is ω^t + the reassembled update (Σ λ' = 1).
+
     Under a client mesh the same bodies run per **cohort shard**
     (``shard_map`` over the mesh's first axis): cohort ids and round
     weights are computed identically on every device from the replicated
@@ -336,6 +351,7 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
     """
     combine = algorithm.combine
     compressed = compressor is not None
+    sketched = compressed and getattr(compressor, "sketched", False)
 
     def chunk(params, state, cstate, x_train, y_train, weights, key_data,
               cohort_chunk, idx_chunk, ts, shard=None):
@@ -399,9 +415,6 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                 kd = jax.random.key_data(key_t).reshape(-1) \
                     .astype(jnp.uint32)
                 k0, k1 = kd[0], kd[-1]
-                comp, new_resid = jax.vmap(
-                    lambda m, r, c: compressor.compress(m, r, k0, k1, c)
-                )(raw, resid, cids.astype(jnp.uint32))
 
                 # sentinel-padded slots (mesh padding) must contribute
                 # nothing: their messages are forced to zero here, and
@@ -410,21 +423,80 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                     m = live.reshape((-1,) + (1,) * (c.ndim - 1))
                     return jnp.where(m, c, jnp.zeros_like(c))
 
+                def _scatter_resid(cstate, new_resid):
+                    if shard is None:
+                        upd, at_ids = new_resid, cids
+                    else:
+                        # cohort-sized collective: every device sees all
+                        # S updated rows and applies the identical
+                        # scatter, so the replicated arena stays
+                        # replicated bit-for-bit
+                        upd = jax.tree.map(
+                            lambda u: jax.lax.all_gather(
+                                u, shard, axis=0, tiled=True), new_resid)
+                        at_ids = cohort_t
+                    return jax.tree.map(
+                        lambda a, u: a.at[at_ids].set(u, mode="drop"),
+                        cstate, upd)
+
+                if sketched:
+                    # weighted message + residual → (rows, cols) sketch
+                    # per member; λ' is applied *before* the encode (the
+                    # bucket values must stay on the fixed-point grid)
+                    if combine == "sum":
+                        inp = jax.tree.map(                  # λ' in ws
+                            lambda m, r: m.astype(jnp.float32) + r,
+                            raw, resid)
+                    else:
+                        inp = jax.tree.map(
+                            lambda d, r: rw.reshape(
+                                (-1,) + (1,) * (d.ndim - 1))
+                            * d.astype(jnp.float32) + r, raw, resid)
+
+                    def _combine(msgs, key):
+                        # the sketches / phase-2 values merge linearly,
+                        # so the secure masked Z_{2^32} sum equals the
+                        # single-device aggregate bit-for-bit
+                        if shard is None:
+                            return aggregation.combine_messages(msgs, key)
+                        return aggregation.finalize_combine(
+                            jax.lax.psum(aggregation.partial_combine(
+                                msgs, key, offset, cohort_t.shape[0]),
+                                shard))
+
+                    # phase 1: masked sketch sum → top-k support
+                    sk = _gate(jax.vmap(
+                        lambda m, c: compressor.encode(m, k0, k1, c)
+                    )(inp, cids.astype(jnp.uint32)))
+                    like = jax.tree.map(lambda x: x[0], inp)
+                    support = compressor.support(_combine(sk, key_t), like)
+                    # phase 2: exact values at the broadcast support,
+                    # masked under a fresh key (a reused pair-mask
+                    # stream across the two uploads would cancel in
+                    # each sum but expose their difference)
+                    vals = _gate(jax.vmap(
+                        lambda m: compressor.values(m, support))(inp))
+                    agg_v = _combine(
+                        vals, jax.random.fold_in(key_t, 0x5EED))
+                    dec = compressor.reassemble(agg_v, support, like)
+                    # plain top-k error feedback: the server applied the
+                    # exact sum at the support, so zeroing the support
+                    # is each member's own debit
+                    new_resid = jax.vmap(
+                        lambda m: compressor.update_residual(m, support)
+                    )(inp)
+                    cstate = _scatter_resid(cstate, new_resid)
+                    agg = dec if combine == "sum" else jax.tree.map(
+                        lambda p, d: p + d, params, dec)
+                    params, state = algorithm.server_step(params, state,
+                                                          agg)
+                    return RoundCarry(params, state, cstate), None
+
+                comp, new_resid = jax.vmap(
+                    lambda m, r, c: compressor.compress(m, r, k0, k1, c)
+                )(raw, resid, cids.astype(jnp.uint32))
                 comp = jax.tree.map(_gate, comp)
-                if shard is None:
-                    upd, at_ids = new_resid, cids
-                else:
-                    # cohort-sized collective: every device sees all S
-                    # updated rows and applies the identical scatter, so
-                    # the replicated arena stays replicated bit-for-bit
-                    upd = jax.tree.map(
-                        lambda u: jax.lax.all_gather(u, shard, axis=0,
-                                                     tiled=True),
-                        new_resid)
-                    at_ids = cohort_t
-                cstate = jax.tree.map(
-                    lambda a, u: a.at[at_ids].set(u, mode="drop"),
-                    cstate, upd)
+                cstate = _scatter_resid(cstate, new_resid)
                 if combine == "sum":
                     msgs = comp                              # λ' in ws
                 else:

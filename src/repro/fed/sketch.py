@@ -1,0 +1,246 @@
+"""Sketched uploads: the sublinear **secure** wire (FetchSGD-style).
+
+Compression (:mod:`repro.fed.compression`) shrinks the *plain* wire
+only: under secure aggregation every upload must travel as the dense
+Z_{2^32} ring element — a sparse or narrow payload would reveal its
+support or range through the one-time-pad mask — so qsgd/top-k leave
+the secure uplink at O(model) int32 words per client.  The way out is
+**dimension reduction before masking**: each client projects its upload
+into a count-sketch S_i ∈ R^{rows×cols} (a CSVec, FetchSGD), the masks
+are applied to the *sketch*, and the server's wraparound sum of masked
+sketches is exactly Σ_i S_i — sketches are linear, so they merge under
+the existing masked sum with **zero protocol changes**, and the secure
+wire is O(rows·cols), sublinear in the model.
+
+One round of :class:`CountSketchCompressor` through the engine
+(:mod:`repro.fed.engine`) is **two-phase** — the sketch finds *where*,
+an exact masked gather supplies *what* (the sketched-SGD construction,
+Ivkin et al. 2019; applying sketch-*estimated* values directly injects
+O(1)-relative collision noise into the server step, which destabilizes
+the error-feedback loop — the estimate is good enough to rank
+coordinates, not to be the update):
+
+1. *client* — inp_i = λ'_i m_i + r_i (message plus the client's
+   error-feedback residual, gathered from the population-resident
+   (I, …) arena exactly like top-k's); the top-``keep`` coordinates of
+   inp_i are stochastically rounded onto the secure fixed-point grid
+   and bucket-accumulated in one fused pass
+   (:mod:`repro.kernels.sketch`) — keeping bucket occupancy ≪ 1 so the
+   unsketch is clean.  The sketch's bucket values are exact grid
+   points, so :class:`repro.fed.aggregation.SecureAggregation`
+   quantizes them losslessly and mask cancellation is bit-exact.
+2. *wire, phase 1* — the S masked sketches travel and psum as int32
+   ring elements; the server recovers Σ_i sketch_i bit-for-bit and
+   takes the top-k of the **median-of-rows** estimate → the k support
+   indices (:meth:`support`), broadcast downlink (4k bytes, negligible
+   next to the dense model broadcast).
+3. *wire, phase 2* — each client gathers its own exact inp_i at the
+   broadcast support (:meth:`values`, a (k,) vector) and uploads it
+   under the same aggregation strategy with a **fresh mask stream**;
+   the server's masked sum is Σ_i inp_i|support, scattered into the
+   model-shaped update (:meth:`reassemble`).
+4. *client* — :meth:`update_residual`: r_i' = inp_i with the support
+   zeroed — exactly plain top-k error feedback (the server applied the
+   true sum at the support, so each client debits precisely what it
+   contributed; nothing estimate-shaped ever enters the residual).
+   Coordinates the sketch *missed* stay in r_i — the arena absorbs the
+   estimation error as deferred mass, not as value noise.  The arena
+   rows of non-participating clients never move.
+
+Sizing: the secure uplink is 4·(rows·cols + k) bytes instead of 4·n —
+for a ≥10× wire reduction pick rows·cols + k ≤ n/10.  Bucket values
+must stay within the f32-exact grid span |v| < 2^(24 − scale_bits) and
+the aggregate within the Z_{2^31−scale_bits} masking range (gradient-
+scale messages at the default 2^-20 grid sit orders of magnitude below
+both).  Support recovery degrades gracefully: per-row bucket occupancy
+is S·keep/cols, and the median over rows rejects collision outliers —
+whatever the sketch misranks simply stays in the residual for a later
+round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.compression import (_F32_BYTES, _flatten_concat, _to_2d,
+                                   _unflatten)
+from repro.kernels import compress as _kc
+from repro.kernels import sketch as _ksk
+
+
+@dataclasses.dataclass(frozen=True)
+class CountSketchCompressor:
+    """Count-sketch upload projection with per-client error feedback.
+
+    ``rows × cols`` is the sketch (cols a power of two — the hash is
+    the PRF word's low bits); ``fraction`` the k of the server's top-k
+    unsketch (k = ⌈fraction·n⌉); ``scale_bits`` the fixed-point grid
+    the bucket values land on — it must match the
+    :class:`~repro.fed.aggregation.SecureAggregation` grid for the
+    masked sum to be exact (both default to 20); ``seed`` keys the
+    hash/sign streams (static: shared by all clients and rounds, or
+    sketches would not merge).
+
+    ``keep`` is the client-side top-``keep`` pre-sparsification *into*
+    the sketch (``None`` → rows·cols // 32): each client sketches only
+    its ``keep`` largest-magnitude coordinates and the rest goes
+    straight to its residual — the sketched-SGD refinement of FetchSGD
+    (Ivkin et al., 2019).  Without it every bucket accumulates ~n/(R·C)
+    colliding coordinates and the estimator noise grows with the
+    residual-laden message norm — an unstable error-feedback loop at
+    the ≥10× compression this wire targets.  With bucket occupancy
+    S·keep/(R·C) ≪ 1 collisions are rare, estimates are clean, and the
+    loop contracts like plain top-k error feedback while the wire stays
+    O(rows·cols).  Size ``keep`` ≲ rows·cols/(4·S) for a cohort of S.
+    """
+    rows: int = 4
+    cols: int = 512
+    fraction: float = 0.02
+    keep: Optional[int] = None
+    scale_bits: int = 20
+    seed: int = 0x5EEDC0DE
+
+    name = "sketch"
+    is_identity = False
+    stateful = True
+    sketched = True             # wire shape != message shape (engine hook)
+
+    def __post_init__(self):
+        r, c = self.rows, self.cols
+        if isinstance(r, bool) or not isinstance(r, (int, np.integer)) \
+                or not 1 <= int(r) <= 64:
+            raise ValueError(f"rows={r!r} outside [1, 64]")
+        if isinstance(c, bool) or not isinstance(c, (int, np.integer)) \
+                or not 1 <= int(c) <= 2 ** 24 or (int(c) & (int(c) - 1)):
+            raise ValueError(f"cols={c!r} must be a power of two in "
+                             "[1, 2^24] (the bucket hash is the PRF "
+                             "word's low bits)")
+        f = float(self.fraction)
+        if not 0.0 < f <= 1.0:
+            raise ValueError(f"fraction={self.fraction!r} outside (0, 1]")
+        k = self.keep
+        if k is not None and (isinstance(k, bool)
+                              or not isinstance(k, (int, np.integer))
+                              or int(k) < 1):
+            raise ValueError(f"keep={k!r} must be a positive int (or None"
+                             " for rows·cols // 32)")
+        b = self.scale_bits
+        if isinstance(b, bool) or not isinstance(b, (int, np.integer)) \
+                or not 1 <= int(b) <= 30:
+            raise ValueError(f"scale_bits={b!r} outside [1, 30]")
+
+    # -- per-client state (the same population-resident arena as top-k) --
+
+    def init_client_state(self, msg_avals, num_clients: int):
+        return jax.tree.map(
+            lambda a: jnp.zeros((num_clients,) + tuple(a.shape),
+                                jnp.float32), msg_avals)
+
+    def _k(self, elements: int) -> int:
+        return max(1, math.ceil(float(self.fraction) * elements))
+
+    @property
+    def _keep(self) -> int:
+        if self.keep is not None:
+            return int(self.keep)
+        return max(1, int(self.rows) * int(self.cols) // 32)
+
+    @property
+    def _seed_u32(self):
+        return np.uint32(self.seed & 0xFFFFFFFF)
+
+    # -- the two-phase protocol steps ------------------------------------
+
+    def encode(self, msg, key0, key1, cid):
+        """One client: message pytree (residual already added by the
+        engine) → (rows, cols) f32 sketch with values on the grid.
+
+        Only the client's top-``keep`` coordinates enter the sketch
+        (threshold semantics — ties at the keep-th magnitude all enter);
+        the rest never leaves the device and stays in the residual via
+        :meth:`update_residual` (the debit only touches the support)."""
+        flat, _, _ = _flatten_concat(msg)
+        m = min(self._keep, flat.shape[0])
+        thr = jax.lax.top_k(jnp.abs(flat), m)[0][m - 1]
+        flat = jnp.where(jnp.abs(flat) >= thr, flat, 0.0)
+        buf, _ = _to_2d(flat)
+        seed = _kc.client_stream_seed(key0, key1, cid)
+        su = jnp.stack([seed, jnp.uint32(0), jnp.uint32(self._seed_u32)])
+        sk = _ksk.sketch_encode(buf, su, rows=int(self.rows),
+                                cols=int(self.cols),
+                                scale_bits=int(self.scale_bits))
+        return sk.astype(jnp.float32) \
+            * jnp.float32(2.0 ** -int(self.scale_bits))
+
+    def support(self, agg_sketch, like):
+        """Server, phase 1: aggregate sketch → (k,) support indices —
+        top-k by magnitude of the **median-of-rows** estimate over every
+        model coordinate (median rejects bucket-collision outliers that
+        would promote phantom coordinates).  ``like`` supplies the
+        message pytree structure (shapes only)."""
+        leaves, _ = jax.tree_util.tree_flatten(like)
+        n = sum(int(np.prod(x.shape)) if x.shape else 1 for x in leaves)
+        counters = jnp.arange(n, dtype=jnp.uint32)
+        est = _ksk.sketch_estimate_median(agg_sketch, counters,
+                                          self._seed_u32)
+        return jax.lax.top_k(jnp.abs(est), self._k(n))[1]
+
+    def values(self, msg, support):
+        """One client, phase 2: its *exact* message values at the
+        broadcast support — a (k,) vector, the round's second masked
+        upload.  The aggregate of these is Σ_i inp_i|support: the
+        server applies true sums, never estimates."""
+        flat, _, _ = _flatten_concat(msg)
+        return flat[support]
+
+    def reassemble(self, agg_values, support, like):
+        """Server, phase 2: aggregated (k,) values at (k,) support →
+        the k-sparse model-shaped update."""
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        shapes = [x.shape for x in leaves]
+        n = sum(int(np.prod(s)) if s else 1 for s in shapes)
+        dense = jnp.zeros((n,), jnp.float32).at[support].set(
+            agg_values.astype(jnp.float32))
+        return _unflatten(dense, treedef, shapes)
+
+    def update_residual(self, msg, support):
+        """One client: r' = inp with the support zeroed — plain top-k
+        error feedback.  The server applied the exact sum at the
+        support, so zeroing is precisely each client's own debit; all
+        unsent mass (including whatever the sketch misranked) stays and
+        feeds back next round."""
+        flat, treedef, shapes = _flatten_concat(msg)
+        return _unflatten(flat.at[support].set(0.0), treedef, shapes)
+
+    # -- communication-ledger hooks --------------------------------------
+
+    def payload_bytes(self, elements: int, leaves: int,
+                      elem_bytes: int) -> int:
+        del leaves, elem_bytes  # sketch + the phase-2 exact values
+        return (int(self.rows) * int(self.cols)
+                + self._k(elements)) * _F32_BYTES
+
+    def wire_elements(self, dense_elements: int) -> int:
+        """What actually gets masked: rows·cols sketch buckets plus the
+        k phase-2 values — the dimension reduction that makes the
+        secure wire sublinear in the model."""
+        return int(self.rows) * int(self.cols) + self._k(dense_elements)
+
+    def extra_downlink_bytes(self, elements: int) -> int:
+        """The k support indices broadcast between the phases (4 bytes
+        each; clients need them for the gather and the residual
+        debit)."""
+        return 4 * self._k(elements)
+
+
+def sketch(rows: int = 4, cols: int = 512, fraction: float = 0.02,
+           keep: Optional[int] = None, scale_bits: int = 20,
+           seed: int = 0x5EEDC0DE) -> CountSketchCompressor:
+    return CountSketchCompressor(rows=rows, cols=cols, fraction=fraction,
+                                 keep=keep, scale_bits=scale_bits,
+                                 seed=seed)

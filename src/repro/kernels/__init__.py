@@ -6,5 +6,10 @@ validation against pure-jnp oracles (ref.py):
                         pair masks + Z_{2^32} accumulate in one pass
 * ``flash_attention`` — blocked causal GQA attention
 * ``rwkv6_wkv``       — chunked RWKV-6 WKV scan (TPU port of the CUDA kernel)
+* ``sketch``          — fused count-sketch encode for the sublinear secure wire
+
+``ref`` (the pure-jnp oracles, including the retired mask-materializing
+secure combine) is deliberately *not* imported here: it is test/benchmark
+machinery, loaded lazily so the engine's hot path never pays for it.
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops  # noqa: F401

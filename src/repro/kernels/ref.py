@@ -3,11 +3,24 @@
 Each function mirrors its kernel's contract exactly (same argument
 shapes/dtypes) with straightforward jnp code; tests sweep shapes and
 dtypes and assert allclose between kernel (interpret=True) and oracle.
+
+Also home to :func:`secure_masked_combine`, the retired O(P·model)
+mask-materializing secure-aggregation path: it is the *definitional*
+Bonawitz construction (every pair mask built as a full tensor) and the
+streaming path's bit-exactness oracle, but it is never dispatched by
+production code — :class:`repro.fed.aggregation.SecureAggregation`
+imports it lazily only when ``streaming=False`` is explicitly requested,
+so the engine's hot path pays nothing for it.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import secure_agg as _sa
 
 
 def ssca_update_2d(w, lin, g, beta, scalars):
@@ -57,3 +70,55 @@ def rwkv6_wkv_bh(r, k, v, lw, u):
         return o
 
     return jax.vmap(per_seq)(r, k, v, lw, u)
+
+
+@functools.lru_cache(maxsize=32)
+def _pair_structure(n: int):
+    """Static per-cohort-size pair layout for the reference masked path:
+    the P = n(n−1)/2 (lo, hi) index vectors and the (n, P) ±1 sign
+    matrix.  Cached so repeated traces reuse one set of host arrays."""
+    lo, hi = np.triu_indices(n, k=1)
+    signs = np.zeros((n, len(lo)), np.int32)
+    signs[lo, np.arange(len(lo))] = 1
+    signs[hi, np.arange(len(lo))] = -1
+    return (np.asarray(lo, np.uint32), np.asarray(hi, np.uint32),
+            signs)
+
+
+def secure_masked_combine(wmsgs, key, scale_bits: int):
+    """The PR-1 mask-materializing secure combine: all P = S(S−1)/2 pair
+    masks built as full leaf-sized tensors and combined by a signed
+    tensordot in Z_{2^32}.  Bit-identical to the streaming path (mod-2^32
+    addition is exactly associative/commutative); O(P·model) traffic, so
+    reference/benchmark use only.
+    """
+    n = jax.tree.leaves(wmsgs)[0].shape[0]
+    leaves, treedef = jax.tree_util.tree_flatten(jax.tree.map(
+        lambda m: _sa.quantize(m, scale_bits), wmsgs))
+
+    if n > 1:
+        lo, hi, signs = _pair_structure(n)
+        signs = jnp.asarray(signs)
+        pair_keys = jax.vmap(
+            lambda a, b: jax.random.fold_in(jax.random.fold_in(key, a), b)
+        )(jnp.asarray(lo), jnp.asarray(hi))
+        leaf_keys = jax.vmap(
+            lambda k: jax.random.split(k, len(leaves)))(pair_keys)
+
+        def _mask_and_sum(li, q):
+            # q: (S, ...) int32.  masks: (P, ...) uniform over Z_2^32.
+            bits = jax.vmap(
+                lambda k: jax.random.bits(k, q.shape[1:], jnp.uint32)
+            )(leaf_keys[:, li])
+            masks = jax.lax.bitcast_convert_type(bits, jnp.int32)
+            # per-client mask totals: ±1 signed sum over pairs; int32
+            # overflow wraps (two's complement) — exactly Z_2^32.
+            per_client = jnp.tensordot(signs, masks, axes=1)
+            return jnp.sum(q + per_client, axis=0)           # server's sum
+
+        agg_q = [_mask_and_sum(li, q) for li, q in enumerate(leaves)]
+    else:
+        agg_q = [jnp.sum(q, axis=0) for q in leaves]
+
+    agg = [_sa.dequantize(a, scale_bits) for a in agg_q]
+    return jax.tree_util.tree_unflatten(treedef, agg)

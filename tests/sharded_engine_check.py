@@ -16,10 +16,12 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+import jax
 import numpy as np
 
 from repro.data import partition, synthetic
 from repro.fed import aggregation, compression, runtime
+from repro.fed import sketch as fsk
 from repro.launch.mesh import make_client_mesh
 
 
@@ -68,6 +70,13 @@ def main():
          {"local_steps": 2, "lr_a": 2.0,
           "aggregation": aggregation.sampled(3),
           "compressor": compression.qsgd(8)}),
+        # the sketched secure wire over a *padded* cohort: S=3 on 2
+        # devices — both masked phases (sketch sum, exact values at the
+        # support) must survive the sentinel slot's gated upload
+        ("alg1/sketch+secure3", runtime.run_alg1,
+         {"aggregation": aggregation.secure(num_sampled=3),
+          "compressor": fsk.sketch(rows=4, cols=512, fraction=0.02,
+                                   keep=64)}),
     ]
     for name, fn, extra in cases:
         _, h1 = fn(data, part, **kw, **extra)
@@ -81,6 +90,25 @@ def main():
         # psum reassociation only (secure is bit-exact in the aggregate)
         assert gap < 5e-5, (name, gap)
         assert acc_gap < 2e-3, (name, acc_gap)
+
+    # the sketched secure path is mesh == single-device *bitwise* in the
+    # model trajectory: every cross-device reduction it takes — the
+    # masked sketch sum and the masked phase-2 value sum — is an int32
+    # ring psum, exactly associative, so the decoded update (and hence
+    # every parameter of every round) is identical to the last bit.
+    # (train_cost is an f32 cost psum like every config, so it only gets
+    # the reassociation bound above.)
+    skc = fsk.sketch(rows=4, cols=512, fraction=0.02, keep=64)
+    p1, h1 = runtime.run_alg1(data, part, compressor=skc, secure=True,
+                              **kw)
+    p2, h2 = runtime.run_alg1(data, part, mesh=mesh, compressor=skc,
+                              secure=True, **kw)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    gap_sk = float(np.max(np.abs(np.asarray(h1.train_cost)
+                                 - np.asarray(h2.train_cost))))
+    assert gap_sk < 5e-5, gap_sk
+    print(f"sketch+secure params bitwise OK  cost gap {gap_sk:.2e}")
 
     # identity compression on the mesh is bit-identical to no compressor
     _, h_n = runtime.run_alg1(data, part, mesh=mesh, **kw)

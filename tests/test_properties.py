@@ -175,6 +175,73 @@ class TestKernelProperties:
                                    rtol=1e-5, atol=1e-6)
 
 
+class TestSketchProperties:
+    """The sketched secure wire's pinned invariants (fed/sketch.py):
+    the mean-of-rows estimator is unbiased over the hash stream, and
+    sketches merge linearly in Z_{2^32} under pairwise masking."""
+
+    @given(seed=st.integers(0, 2**16), span=st.integers(1, 32),
+           rows=st.sampled_from([1, 2, 4]))
+    @settings(max_examples=8, deadline=None)
+    def test_estimator_unbiased_over_hash_stream(self, seed, span, rows):
+        """E_hash[x̂_j] = x_j: averaging the mean-of-rows estimate over
+        many independent hash streams (sketch seeds) converges on the
+        true coordinate — collisions contribute ±x_l with independent
+        Rademacher signs, mean zero.  On-grid inputs, so stochastic
+        rounding is deterministic and only hashing varies."""
+        from repro.kernels import sketch as ksk
+        rng = np.random.default_rng(seed)
+        grid = np.float32(2.0 ** -20)
+        x = jnp.asarray(rng.integers(-span, span + 1,
+                                     size=(2, ksk.LANES))
+                        .astype(np.float32) * grid)
+        flat = np.asarray(x).reshape(-1)
+        counters = jnp.arange(flat.size, dtype=jnp.uint32)
+        n_seeds = 256
+
+        def one(sk_seed):
+            su = jnp.stack([jnp.uint32(1), jnp.uint32(0), sk_seed])
+            sk = ksk.sketch_encode_xla(x, su, rows=rows, cols=128,
+                                       scale_bits=20)
+            return ksk.sketch_estimate(sk.astype(jnp.float32),
+                                       counters, sk_seed) * grid
+
+        est = np.asarray(jax.vmap(one)(
+            jnp.arange(n_seeds, dtype=jnp.uint32)
+            + jnp.uint32(seed * 131)))           # (n_seeds, n)
+        se = est.std(axis=0, ddof=1) / np.sqrt(n_seeds)
+        err = np.abs(est.mean(axis=0) - flat)
+        assert (err <= 7.0 * se + 16 * grid).all(), \
+            float((err - 7.0 * se).max() / grid)
+
+    @given(seed=st.integers(0, 2**16), clients=st.integers(2, 5),
+           span=st.integers(1, 64))
+    @settings(max_examples=10, deadline=None)
+    def test_merge_linearity_under_masking(self, seed, clients, span):
+        """Σ_i sketch(m_i) under the masked Z_{2^32} sum equals
+        sketch(Σ_i m_i) bit-for-bit — rounding on-grid inputs is exact,
+        bucket accumulation is int32 ring arithmetic, and mask
+        cancellation is exact, so the whole chain is an identity."""
+        from repro.fed import sketch as fsk
+        rng = np.random.default_rng(seed)
+        grid = np.float32(2.0 ** -20)
+        n = 2 * 128
+        comp = fsk.sketch(rows=3, cols=256, fraction=0.05, keep=n)
+        k0, k1 = jnp.uint32(0xA1B2C3D4), jnp.uint32(seed & 0xFFFFFFFF)
+        msgs = [{"w": jnp.asarray(
+            rng.integers(-span, span + 1, size=n).astype(np.float32)
+            * grid)} for _ in range(clients)]
+        sks = jnp.stack([comp.encode(m, k0, k1, jnp.uint32(c))
+                         for c, m in enumerate(msgs)])
+        from repro.fed import aggregation
+        agg = aggregation.secure().combine_messages(
+            sks, jax.random.key(seed))
+        direct = comp.encode({"w": sum(m["w"] for m in msgs)},
+                             k0, k1, jnp.uint32(77))
+        np.testing.assert_array_equal(np.asarray(agg),
+                                      np.asarray(direct))
+
+
 class TestAttentionProperties:
     @given(s=st.sampled_from([16, 32, 64]), window=st.sampled_from([0, 8]),
            seed=st.integers(0, 2**16))
