@@ -303,9 +303,15 @@ class SecureAggregation:
         uploads make the masked aggregate exact); shrinking secure wire
         bytes needs dimension reduction before masking — which is what
         :mod:`repro.fed.sketch` does: ``dense_elements`` arrives as the
-        compressor's declared masked dimension (``wire_elements``), so a
-        sketched upload is charged per sketch bucket, sublinear in the
-        model."""
+        compressor's declared masked dimension (``wire_elements``, the
+        sum over *all* of the round's masked uploads — the sketch's two
+        phases contribute rows·cols + k), so a sketched upload is
+        charged per sketch bucket, sublinear in the model.  The per-peer
+        seed share is charged once per **round**, not per masked upload:
+        a multi-phase round derives each phase's mask stream from the
+        same exchanged pair secret by domain separation (exactly how the
+        engine folds the round key for the sketch's phase 2), so no
+        second exchange ever happens."""
         del payload_bytes
         peers = self.cohort_size(num_clients) - 1
         return 4 * dense_elements + 4 * peers

@@ -327,10 +327,12 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
     *sketches* are aggregated by the strategy (they are linear, so the
     secure masked Z_{2^32} sum is the sketch of the summed update
     bit-for-bit); the server ranks a top-k support from the aggregate
-    sketch, and the members' *exact* values at the broadcast support
-    travel as a second (k,)-shaped aggregation under a fresh mask key.
-    Each member then zeroes the support out of its own input — plain
-    top-k error feedback into the same (I, …) residual arena.  For
+    sketch, and the members' values at the broadcast support —
+    stochastically rounded onto the secure grid client-side — travel as
+    a second (k,)-shaped aggregation under a fresh mask key.  Each
+    member then debits its own on-grid phase-2 upload from its input —
+    top-k error feedback (residual == input − applied, exactly) into
+    the same (I, …) residual arena.  For
     mean-combine the λ'_i weighting moves *before* the encode (the
     sketch's bucket values must stay on the fixed-point grid), and the
     aggregate is ω^t + the reassembled update (Σ λ' = 1).
@@ -470,21 +472,30 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                     )(inp, cids.astype(jnp.uint32)))
                     like = jax.tree.map(lambda x: x[0], inp)
                     support = compressor.support(_combine(sk, key_t), like)
-                    # phase 2: exact values at the broadcast support,
-                    # masked under a fresh key (a reused pair-mask
-                    # stream across the two uploads would cancel in
-                    # each sum but expose their difference)
-                    vals = _gate(jax.vmap(
-                        lambda m: compressor.values(m, support))(inp))
+                    # phase 2: values at the broadcast support, rounded
+                    # onto the secure grid client-side (the masked sum
+                    # then equals what the clients uploaded, bit-exact)
+                    # and masked under a fresh stream (a reused
+                    # pair-mask stream across the two uploads would
+                    # cancel in each sum but expose their difference).
+                    # The fresh stream is *derived* from the round's
+                    # pair secrets by domain separation — fold_in of
+                    # the round key, no second pair-seed exchange — so
+                    # the ledger's one per-peer seed charge per round
+                    # covers both masked uploads.
+                    vals = jax.vmap(
+                        lambda m, c: compressor.values(m, support,
+                                                       k0, k1, c)
+                    )(inp, cids.astype(jnp.uint32))
                     agg_v = _combine(
-                        vals, jax.random.fold_in(key_t, 0x5EED))
+                        _gate(vals), jax.random.fold_in(key_t, 0x5EED))
                     dec = compressor.reassemble(agg_v, support, like)
-                    # plain top-k error feedback: the server applied the
-                    # exact sum at the support, so zeroing the support
-                    # is each member's own debit
+                    # top-k error feedback with the debit equal to the
+                    # member's own on-grid phase-2 upload: the residual
+                    # keeps the rounding error (r' = inp − applied)
                     new_resid = jax.vmap(
-                        lambda m: compressor.update_residual(m, support)
-                    )(inp)
+                        lambda m, v: compressor.update_residual(
+                            m, support, v))(inp, vals)
                     cstate = _scatter_resid(cstate, new_resid)
                     agg = dec if combine == "sum" else jax.tree.map(
                         lambda p, d: p + d, params, dec)
@@ -603,6 +614,19 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
         else PlainAggregation()
     if compressor is not None and compressor.is_identity:
         compressor = None       # same trace, cache entry and trajectory
+    comp_grid = getattr(compressor, "scale_bits", None)
+    agg_grid = getattr(aggregation, "scale_bits", None)
+    if comp_grid is not None and agg_grid is not None \
+            and int(comp_grid) != int(agg_grid):
+        # a grid-emitting compressor (the count-sketch) is only lossless
+        # under secure aggregation when the two fixed-point grids agree;
+        # a mismatch would silently re-round every bucket off-grid and
+        # break the bit-exact masked merge — refuse it up front
+        raise ValueError(
+            f"compressor scale_bits={int(comp_grid)} != aggregation "
+            f"scale_bits={int(agg_grid)}: the compressor emits values on "
+            "the 2^-scale_bits fixed-point grid and the secure masked sum "
+            "is only exact when the grids match")
     cohort = aggregation.cohort_size(part.num_clients)   # validates range
     if params is None:
         params = task.init_params(jax.random.key(seed))

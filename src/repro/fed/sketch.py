@@ -34,18 +34,26 @@ coordinates, not to be the update):
    takes the top-k of the **median-of-rows** estimate → the k support
    indices (:meth:`support`), broadcast downlink (4k bytes, negligible
    next to the dense model broadcast).
-3. *wire, phase 2* — each client gathers its own exact inp_i at the
-   broadcast support (:meth:`values`, a (k,) vector) and uploads it
-   under the same aggregation strategy with a **fresh mask stream**;
-   the server's masked sum is Σ_i inp_i|support, scattered into the
-   model-shaped update (:meth:`reassemble`).
-4. *client* — :meth:`update_residual`: r_i' = inp_i with the support
-   zeroed — exactly plain top-k error feedback (the server applied the
-   true sum at the support, so each client debits precisely what it
-   contributed; nothing estimate-shaped ever enters the residual).
-   Coordinates the sketch *missed* stay in r_i — the arena absorbs the
-   estimation error as deferred mass, not as value noise.  The arena
-   rows of non-participating clients never move.
+3. *wire, phase 2* — each client gathers its own inp_i at the
+   broadcast support, **stochastically rounds it onto the secure
+   fixed-point grid** (:meth:`values`, a (k,) on-grid vector — rounding
+   client-side makes :class:`~repro.fed.aggregation.SecureAggregation`'s
+   quantization the identity, so the masked sum is *exactly* the sum of
+   what the clients uploaded, not a re-rounded approximation of it) and
+   uploads it under a **fresh mask stream** — derived from the round's
+   pair secrets by domain separation, not a second pair-seed exchange,
+   so the ledger's one per-peer seed charge covers both masked uploads;
+   the server's masked sum is scattered into the model-shaped update
+   (:meth:`reassemble`).
+4. *client* — :meth:`update_residual`: r_i' = inp_i minus its own
+   phase-2 upload at the support — top-k error feedback with the debit
+   equal to **exactly what the server applied**, so the per-coordinate
+   stochastic-rounding error stays inside the error-feedback loop (the
+   same discipline :class:`~repro.fed.compression.TopKCompressor` uses
+   for its quantization error) and r == inp − applied holds
+   elementwise.  Coordinates the sketch *missed* stay in r_i — the
+   arena absorbs the estimation error as deferred mass, not as value
+   noise.  The arena rows of non-participating clients never move.
 
 Sizing: the secure uplink is 4·(rows·cols + k) bytes instead of 4·n —
 for a ≥10× wire reduction pick rows·cols + k ≤ n/10.  Bucket values
@@ -71,6 +79,13 @@ from repro.fed.compression import (_F32_BYTES, _flatten_concat, _to_2d,
                                    _unflatten)
 from repro.kernels import compress as _kc
 from repro.kernels import sketch as _ksk
+from repro.kernels.secure_agg import _mix32
+
+# Domain-separation tag of the phase-2 rounding stream: phase 1 already
+# consumed counters 0..n−1 on the client's per-round stream, and phase 2
+# draws at the *same* coordinates (the support), so it must re-key — a
+# reused (seed, counter) pair would correlate the two phases' draws.
+_PHASE2_TAG = np.uint32(0x9D2C5680)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +97,10 @@ class CountSketchCompressor:
     unsketch (k = ⌈fraction·n⌉); ``scale_bits`` the fixed-point grid
     the bucket values land on — it must match the
     :class:`~repro.fed.aggregation.SecureAggregation` grid for the
-    masked sum to be exact (both default to 20); ``seed`` keys the
+    masked sum to be exact (both default to 20, and
+    :func:`repro.fed.engine.run` refuses a mismatched pair rather than
+    letting the server silently re-round off-grid values); ``seed``
+    keys the
     hash/sign streams (static: shared by all clients and rounds, or
     sketches would not merge).
 
@@ -190,13 +208,30 @@ class CountSketchCompressor:
                                           self._seed_u32)
         return jax.lax.top_k(jnp.abs(est), self._k(n))[1]
 
-    def values(self, msg, support):
-        """One client, phase 2: its *exact* message values at the
-        broadcast support — a (k,) vector, the round's second masked
-        upload.  The aggregate of these is Σ_i inp_i|support: the
-        server applies true sums, never estimates."""
+    def values(self, msg, support, key0, key1, cid):
+        """One client, phase 2: its message values at the broadcast
+        support, **stochastically rounded onto the 2^-scale_bits grid**
+        — a (k,) on-grid vector, the round's second masked upload.
+
+        Rounding happens client-side (unbiased, E[v̂] = v): the values
+        arrive exactly on the secure grid, so the aggregation's own
+        quantization is the identity on them and the masked sum the
+        server applies is precisely Σ_i of these vectors — which is
+        what lets :meth:`update_residual` debit the applied value
+        exactly, keeping the rounding error inside the error-feedback
+        loop instead of dropping it.  The rounding stream is the
+        per-(round, client) stream of the phase-1 encode, re-keyed by
+        :data:`_PHASE2_TAG` (phase 1 already drew at these counters),
+        with counters = the global support positions — so a client's
+        draws are identical whichever cohort slot or device it lands
+        on."""
         flat, _, _ = _flatten_concat(msg)
-        return flat[support]
+        seed = _mix32(_kc.client_stream_seed(key0, key1, cid)
+                      ^ _PHASE2_TAG)
+        q = _ksk._round_to_grid(flat[support], support.astype(jnp.uint32),
+                                seed, int(self.scale_bits))
+        return q.astype(jnp.float32) \
+            * jnp.float32(2.0 ** -int(self.scale_bits))
 
     def reassemble(self, agg_values, support, like):
         """Server, phase 2: aggregated (k,) values at (k,) support →
@@ -208,14 +243,16 @@ class CountSketchCompressor:
             agg_values.astype(jnp.float32))
         return _unflatten(dense, treedef, shapes)
 
-    def update_residual(self, msg, support):
-        """One client: r' = inp with the support zeroed — plain top-k
-        error feedback.  The server applied the exact sum at the
-        support, so zeroing is precisely each client's own debit; all
-        unsent mass (including whatever the sketch misranked) stays and
-        feeds back next round."""
+    def update_residual(self, msg, support, vals):
+        """One client: r' = inp − applied.  ``vals`` is this client's
+        own phase-2 upload (:meth:`values`, already on the grid): the
+        server applied exactly Σ_i vals_i at the support, so
+        subtracting ``vals`` there is precisely each client's own debit
+        — the stochastic-rounding error of the kept values stays in the
+        residual and feeds back next round, alongside all unsent mass
+        (including whatever the sketch misranked)."""
         flat, treedef, shapes = _flatten_concat(msg)
-        return _unflatten(flat.at[support].set(0.0), treedef, shapes)
+        return _unflatten(flat.at[support].add(-vals), treedef, shapes)
 
     # -- communication-ledger hooks --------------------------------------
 

@@ -87,8 +87,9 @@ def hash_and_sign(rseed, counters, cols: int):
 def _round_to_grid(x, counters, seed, scale_bits: int):
     """Unbiased stochastic round of f32 onto the int grid units 2^-s —
     the same draw-per-counter construction as
-    :mod:`repro.kernels.compress` (exact zeros stay exact zeros, so
-    lane padding never contributes to a bucket)."""
+    :mod:`repro.kernels.compress` (exact zeros stay exact zeros — the
+    uniform draw u ∈ [0, 1) never beats a zero fraction — so lane and
+    block padding never contributes to a bucket)."""
     y = x * jnp.float32(2.0 ** scale_bits)
     low = jnp.floor(y)
     u = mask_bits(seed, counters).astype(jnp.float32) * _U32_RES
@@ -165,10 +166,26 @@ def _make_kernel(rows: int, cols: int, scale_bits: int):
 def sketch_encode_kernel(x, scalars_u32, *, rows: int, cols: int,
                          scale_bits: int, interpret: bool = False):
     """The fused Pallas pass: blocked over the message, the (rows, cols)
-    int32 sketch accumulated in VMEM across grid steps."""
+    int32 sketch accumulated in VMEM across grid steps.
+
+    The message is zero-padded to a whole number of blocks *before* the
+    ``pallas_call``: a partial boundary block would otherwise be filled
+    by the TPU pipeline with **undefined** values (interpret mode
+    zero-fills, which hides the hazard on CPU), and unlike an
+    element-wise kernel — whose garbage padding lanes are discarded
+    along with the output padding — this kernel *reduces* its input
+    into the live (rows, cols) sketch, so undefined padding would
+    corrupt real buckets.  Explicit zero rows are harmless: an exact
+    zero stochastically rounds to an exact zero (see
+    :func:`_round_to_grid`) and contributes nothing to any bucket, and
+    the valid rows keep their element counters, so the result stays
+    bit-identical to the XLA path for every ``n_rows``."""
     n_rows, lanes = x.shape
     block = min(BLOCK_ROWS, n_rows)
-    grid = (pl.cdiv(n_rows, block),)
+    pad = (-n_rows) % block
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = ((n_rows + pad) // block,)
     return pl.pallas_call(
         _make_kernel(rows, cols, scale_bits),
         grid=grid,

@@ -12,9 +12,10 @@ The contracts:
   update exactly;
 * the two-phase protocol is self-consistent: with a clean sketch
   (occupancy << 1) the median-of-rows support recovers planted heavy
-  hitters, phase-2 values are the exact coordinates, reassembly is
-  their exact masked sum, and the residual debit is exactly
-  input − applied;
+  hitters, phase-2 values are stochastically rounded onto the secure
+  grid client-side (the secure quantizer is the identity on them),
+  reassembly is their exact masked sum, and the residual debit is
+  exactly input − applied — rounding error included;
 * the ledger charges the secure wire per sketch bucket —
   4·(rows·cols + k) + 4·peers per client — which is where the >= 10x
   sublinear-wire claim lives;
@@ -57,8 +58,12 @@ def _encode_keys():
 
 @pytest.mark.parametrize("n_rows,rows,cols",
                          [(1, 1, 64), (7, 4, 128), (9, 3, 256),
-                          (32, 8, 512)])
+                          (12, 2, 64), (17, 3, 128), (32, 8, 512)])
 def test_kernel_bit_exact_vs_xla(n_rows, rows, cols):
+    """Includes n_rows % BLOCK_ROWS != 0 shapes: the kernel zero-pads
+    the message to a whole number of blocks before the pallas_call, so
+    there is never a partial boundary block whose (TPU-undefined)
+    padding could be reduced into the live sketch."""
     rng = np.random.default_rng(7 * n_rows + rows)
     x = jnp.asarray(rng.normal(size=(n_rows, ksk.LANES)) * 0.1,
                     jnp.float32)
@@ -155,29 +160,73 @@ def test_support_recovers_planted_heavy_hitters():
 
 
 def test_values_reassemble_and_residual_are_exact():
-    """Phase 2 carries exact coordinates: reassemble(Σ values) is the
-    exact sum at the support, and the residual debit satisfies
-    residual == input − applied  per client, elementwise."""
+    """Phase 2 on on-grid messages (stochastic rounding is the
+    identity): reassemble(Σ values) is the exact sum at the support,
+    and the residual debit satisfies residual == input − applied  per
+    client, elementwise."""
     rng = np.random.default_rng(9)
     n = 2 * ksk.LANES
     comp = fsk.sketch(rows=4, cols=256, fraction=0.1, keep=32)
+    k0, k1 = _encode_keys()
     msgs = [{"w": _on_grid(rng, n)} for _ in range(3)]
     support = jnp.asarray(rng.choice(n, size=comp._k(n), replace=False)
                           .astype(np.int32))
-    vals = jnp.stack([comp.values(m, support) for m in msgs])
+    vals = jnp.stack([comp.values(m, support, k0, k1, jnp.uint32(c))
+                      for c, m in enumerate(msgs)])
     agg_vals = jnp.sum(vals, axis=0)
     dec = comp.reassemble(agg_vals, support, msgs[0])
     expect = np.zeros(n, np.float32)
     total = sum(np.asarray(m["w"]) for m in msgs)
     expect[np.asarray(support)] = total[np.asarray(support)]
     np.testing.assert_array_equal(np.asarray(dec["w"]), expect)
-    for m in msgs:
-        r = comp.update_residual(m, support)
+    for c, m in enumerate(msgs):
+        r = comp.update_residual(m, support, vals[c])
         applied = np.zeros(n, np.float32)
         applied[np.asarray(support)] = \
             np.asarray(m["w"])[np.asarray(support)]
         np.testing.assert_array_equal(
             np.asarray(r["w"]), np.asarray(m["w"]) - applied)
+
+
+def test_phase2_rounds_onto_grid_and_residual_tracks_applied():
+    """Off-grid messages: phase-2 values are stochastically rounded
+    onto the 2^-scale_bits grid *client-side* (within one grid step of
+    the true value, and a fixed point of the secure quantizer — the
+    masked sum is exactly the sum of the uploads), and the residual
+    debits the *rounded* value, so residual == input − applied holds
+    exactly and the rounding error stays inside the error-feedback
+    loop."""
+    from repro.kernels import secure_agg as sag
+    rng = np.random.default_rng(21)
+    n = 2 * ksk.LANES
+    comp = fsk.sketch(rows=4, cols=256, fraction=0.1, keep=32)
+    k0, k1 = _encode_keys()
+    m = {"w": jnp.asarray(rng.normal(size=n).astype(np.float32))}
+    support = jnp.asarray(rng.choice(n, size=comp._k(n), replace=False)
+                          .astype(np.int32))
+    vals = comp.values(m, support, k0, k1, jnp.uint32(3))
+    scaled = np.asarray(vals).astype(np.float64) / GRID
+    np.testing.assert_array_equal(scaled, np.round(scaled))     # on grid
+    true = np.asarray(m["w"])[np.asarray(support)]
+    assert np.abs(np.asarray(vals) - true).max() <= GRID        # one step
+    assert (np.asarray(vals) != true).any()     # genuinely off-grid input
+    rt = sag.dequantize(sag.quantize(vals, 20), 20)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(vals))
+    r = comp.update_residual(m, support, vals)
+    expect = np.asarray(m["w"]).copy()
+    expect[np.asarray(support)] -= np.asarray(vals)
+    np.testing.assert_array_equal(np.asarray(r["w"]), expect)
+
+
+def test_engine_refuses_scale_bits_mismatch(dataset, fed_partition):
+    """sketch(scale_bits=16) under secure(scale_bits=20) would silently
+    re-round every bucket off-grid, breaking the bit-exact masked merge
+    — the engine refuses the pair up front."""
+    with pytest.raises(ValueError, match="scale_bits"):
+        runtime.run_alg1(dataset, fed_partition, batch_size=10, rounds=2,
+                         eval_every=1, eval_samples=100, hidden=32,
+                         compressor=fsk.sketch(scale_bits=16),
+                         aggregation=aggregation.secure())
 
 
 def test_config_validation():
