@@ -46,6 +46,16 @@ record the acceptance headline — a ≥10× *secure*-uplink reduction at
 faster) as ``derived.mesh_overhead_ratio``, so the number is a tracked
 artifact rather than a surprise in the configs table.
 
+Schema v6 adds the **hierarchy section** (the two-level secure tree,
+:class:`repro.fed.aggregation.HierarchicalAggregation`): flat secure vs
+``hierarchical(secure(num_sampled=S), groups=16)`` at S ∈ {64, 512,
+4096} drawn from synthetic populations up to I = 1M, recording round
+time, root-ingest bytes, and live mask-pair count per topology.  The
+acceptance ratios — ``derived.hier_ingest_reduction`` and
+``derived.hier_mask_pairs_ratio`` ≥ 4× with
+``derived.hier_round_time_ratio`` ≤ 1.2 — are CI-gated; both
+topologies produce bit-identical aggregates, so the reduction is free.
+
     PYTHONPATH=src python benchmarks/bench_all.py [--smoke]
 
 Sharded configs run on virtual host devices
@@ -299,6 +309,53 @@ def main(argv=None):
               f"{h.uplink_bytes_per_round},"
               f"acc={h.test_accuracy[-1]:.4f}")
 
+    # -- the hierarchical tree: flat secure vs the two-level secure tree
+    # (G=16 edge aggregators) at cohort sizes up to S=4096 drawn from
+    # synthetic populations up to I=1M.  Round cost is O(S) either way
+    # (cohort-native engine), so the tiny model isolates the combine; the
+    # ledger columns are what the tree actually buys — root ingest and
+    # live mask-pair state drop from O(S) to O(G)+O(S/G).
+    hier_groups = 16
+    hier_grid = [(64, 10_000), (512, 100_000), (4096, 1_000_000)]
+    hier_rounds = 2
+    hier_rows = []
+    for s_coh, i_pop in hier_grid:
+        hdata = synthetic.classification_dataset(n_train=i_pop, n_test=256,
+                                                 seed=0, k=16)
+        hpart = partition.iid(i_pop, i_pop, seed=0)
+        tree_agg = aggregation.hierarchical(
+            aggregation.secure(num_sampled=s_coh), groups=hier_groups)
+        row = {"name": f"alg1/hier/S{s_coh}", "cohort": s_coh,
+               "population": i_pop, "groups": hier_groups,
+               "members": tree_agg.members(i_pop),
+               "rounds": hier_rounds}
+        for tname, agg in (("flat",
+                            aggregation.secure(num_sampled=s_coh)),
+                           ("tree", tree_agg)):
+            kw = dict(batch_size=4, rounds=hier_rounds,
+                      eval_every=hier_rounds, eval_samples=256, hidden=8,
+                      seed=0, aggregation=agg)
+            runtime.run_alg1(hdata, hpart, **kw)     # compile + stage
+            params, h = runtime.run_alg1(hdata, hpart, **kw)
+            dense = sum(int(np.prod(w.shape))
+                        for w in jax.tree.leaves(params))
+            if tname == "tree":
+                ingest = agg.root_ingest_bytes(dense, i_pop)
+                pairs = agg.mask_pair_count(i_pop)
+            else:
+                ingest = s_coh * 4 * dense
+                pairs = s_coh * (s_coh - 1) // 2
+            row["param_count"] = dense
+            row[tname] = {
+                "round_ms": round(h.wall_seconds / hier_rounds * 1e3, 4),
+                "uplink_bytes_per_round": h.uplink_bytes_per_round,
+                "root_ingest_bytes": ingest,
+                "mask_pairs": pairs}
+            print(f"bench_all/hier/S{s_coh}/{tname},"
+                  f"{h.wall_seconds / hier_rounds * 1e6:.1f},"
+                  f"ingest={ingest} pairs={pairs}")
+        hier_rows.append(row)
+
     def round_ms(name):
         return {c["name"]: c["round_ms"] for c in configs}[name]
 
@@ -344,6 +401,25 @@ def main(argv=None):
     derived["sketch_target"] = ">= 10x secure uplink reduction at " \
         "<= 1% final-accuracy loss"
 
+    # the hierarchical headline: root-ingest and mask-pair reduction of
+    # the two-level tree vs flat secure, plus the round-time tax (the
+    # tree must not slow the round down while shrinking the root's state)
+    derived["hier_ingest_reduction"] = {
+        f"S{r['cohort']}": round(r["flat"]["root_ingest_bytes"]
+                                 / r["tree"]["root_ingest_bytes"], 2)
+        for r in hier_rows}
+    derived["hier_mask_pairs_ratio"] = {
+        f"S{r['cohort']}": round(r["flat"]["mask_pairs"]
+                                 / r["tree"]["mask_pairs"], 2)
+        for r in hier_rows}
+    derived["hier_round_time_ratio"] = {
+        f"S{r['cohort']}": round(r["tree"]["round_ms"]
+                                 / r["flat"]["round_ms"], 2)
+        for r in hier_rows}
+    derived["hier_target"] = \
+        f">= 4x root-ingest and mask-pair reduction at G={hier_groups} " \
+        f"with tree round time <= 1.2x flat (bit-identical aggregates)"
+
     # the CPU mesh tax, per aggregation x model: round time on the
     # host-device mesh over single-device (shard_map on one physical
     # core adds dispatch overhead; on real multi-chip backends this
@@ -356,7 +432,7 @@ def main(argv=None):
         f"shard{shards}/shard1 round_ms on backend=" \
         f"{jax.default_backend()}; expected > 1 on CPU host devices"
 
-    out = {"schema": "bench_engine/v5",
+    out = {"schema": "bench_engine/v6",
            "jax": jax.__version__,
            "backend": jax.default_backend(),
            "host_devices": jax.device_count(),
@@ -366,6 +442,7 @@ def main(argv=None):
            "population": population,
            "comm_curves": comm_curves,
            "sketch": sketch_rows,
+           "hierarchy": hier_rows,
            "derived": derived}
     Path(args.out).write_text(json.dumps(out, indent=1) + "\n")
     print(f"bench_all/summary,0.0,"

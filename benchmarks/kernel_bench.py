@@ -71,6 +71,46 @@ def main() -> None:
     emit("kernel/attend_chunked_2k", us_chunk,
          f"flash-pattern, mem O(S*chunk)")
 
+    # fused count-sketch encode (PR 6): hash + sign + scatter in one
+    # pass per member, the client-side cost of the sublinear secure wire
+    from repro.fed import sketch as fsk
+    comp = fsk.sketch(rows=4, cols=4096, fraction=0.02, keep=256)
+    msg = {"w": jax.random.normal(ks[3], (1 << 18,))}
+    us_enc = bench(jax.jit(
+        lambda m: comp.encode(m, jnp.uint32(1), jnp.uint32(2),
+                              jnp.uint32(3))), msg)
+    emit("kernel/sketch_encode_256k", us_enc,
+         f"rows=4 cols=4096, {1 << 18} elements")
+
+    # grouped masked partial sums (PR 7): G within-group masked sums of
+    # M members vs one flat masked sum over S = G·M clients — same total
+    # uploads, O(M + G) mask streams per element instead of O(S)
+    from repro.kernels import secure_agg as sa
+    s_cl, grp, n = 64, 8, 1 << 14
+    msgs = jax.random.normal(ks[0], (s_cl, n))
+    kd = jnp.asarray([123, 456], jnp.uint32)
+
+    def flat_sum(m):
+        return sa.masked_sum_flat(m, kd, 20)
+
+    def grouped_sum(m):
+        gm = m.reshape(grp, s_cl // grp, n)
+        parts = []
+        for gi in range(grp):    # one masked sum per group, G-keyed
+            parts.append(sa.masked_ring_partial_sum(
+                sa.quantize(gm[gi], 20), kd[0] + jnp.uint32(gi), kd[1],
+                0, s_cl // grp))
+        gk0, gk1 = sa.group_key_words(kd[0], kd[1])
+        return sa.masked_ring_partial_sum(jnp.stack(parts), gk0, gk1,
+                                          0, grp)
+
+    us_flat = bench(jax.jit(flat_sum), msgs)
+    us_grp = bench(jax.jit(grouped_sum), msgs)
+    emit("kernel/masked_sum_flat_64", us_flat, f"S={s_cl} n={n}")
+    emit("kernel/masked_sum_grouped_8x8", us_grp,
+         f"G={grp} M={s_cl // grp}, "
+         f"speedup={us_flat / max(us_grp, 1e-9):.2f}x")
+
 
 if __name__ == "__main__":
     main()

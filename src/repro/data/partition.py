@@ -29,6 +29,12 @@ import numpy as np
 # must differ from the batch stream's bare [seed, t] entropy.
 _COHORT_STREAM = 0xC0407
 
+# Sub-stream tag of the per-round group draw (hierarchical aggregation):
+# independent of both the cohort draw and the batch draw, so turning the
+# two-level tree on or off never perturbs who participates or what they
+# sample — only how the cohort slots are blocked into groups.
+_GROUP_STREAM = 0x6409
+
 # Per-round transient budget of the batch draw, in elements: the
 # (block, width) key/pad matrices of sample_schedule hold at most this
 # many entries per array, whatever the partition's skew (~4 MB of f32
@@ -187,6 +193,42 @@ def sample_cohorts(num_clients: int, cohort_size: int, round_ids,
         rng = np.random.default_rng(
             np.random.SeedSequence([seed, int(t), _COHORT_STREAM]))
         out[k] = np.sort(rng.choice(num_clients, size=s, replace=False))
+    return out
+
+
+def sample_groups(cohort_size: int, num_groups: int, round_ids,
+                  seed: int = 0) -> np.ndarray:
+    """Per-round group assignment for hierarchical aggregation: a (T, S)
+    permutation of the cohort slots, drawn seed-stable per (seed, round
+    id) on its own rng stream (:data:`_GROUP_STREAM` — independent of the
+    cohort and batch draws, so grouping never perturbs participation or
+    sampling).
+
+    The convention is **contiguous blocking of the permuted cohort**:
+    after reordering a round's cohort row by this permutation, group g of
+    the two-level tree owns slots [g·M, (g+1)·M) with M = ⌈S/G⌉ (the last
+    group is sentinel-padded when G ∤ S).  A uniformly random permutation
+    of a uniformly drawn cohort makes every group an exchangeable random
+    sub-cohort, while keeping the group structure a *reshape* — which is
+    what lets the engine lay the (group, member) grid directly onto a
+    2-D device mesh (:func:`repro.launch.mesh.make_group_mesh`) with no
+    scatter.
+
+    ``num_groups == 1`` (a degenerate tree) short-circuits to the
+    identity permutation, no rng consumed.
+    """
+    s, g = int(cohort_size), int(num_groups)
+    if not 1 <= g <= s:
+        raise ValueError(f"num_groups={g} out of range [1, {s}]")
+    round_ids = np.asarray(round_ids, np.int64)
+    if g == 1:
+        return np.broadcast_to(np.arange(s, dtype=np.int64),
+                               (len(round_ids), s)).copy()
+    out = np.empty((len(round_ids), s), np.int64)
+    for k, t in enumerate(round_ids):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, int(t), _GROUP_STREAM]))
+        out[k] = rng.permutation(s)
     return out
 
 

@@ -313,7 +313,14 @@ class SecureAggregation:
         engine folds the round key for the sketch's phase 2), so no
         second exchange ever happens."""
         del payload_bytes
-        peers = self.cohort_size(num_clients) - 1
+        return self.wire_bytes_for_peers(
+            dense_elements, self.cohort_size(num_clients) - 1)
+
+    @staticmethod
+    def wire_bytes_for_peers(dense_elements: int, peers: int) -> int:
+        """The masked-upload wire formula with an explicit peer count —
+        the hierarchical tree reuses it with peers = M−1 (group members)
+        instead of S−1 (the whole cohort)."""
         return 4 * dense_elements + 4 * peers
 
     def partial_combine(self, wmsgs, key, cohort_offset, cohort_size):
@@ -337,6 +344,217 @@ class SecureAggregation:
         return _ref.secure_masked_combine(wmsgs, key, self.scale_bits)
 
 
+@dataclasses.dataclass(frozen=True)
+class HierarchicalAggregation:
+    """Two-level tree combine: clients → G edge aggregators → server.
+
+    Wraps any inner aggregation.  The round's S cohort members are
+    blocked into G groups of M = ⌈S/G⌉ (a seed-stable per-round
+    permutation drawn in the schedule — :func:`repro.data.partition.
+    sample_groups`); each group runs the *inner* combine over its M
+    members (level 1), and the G group partials are merged by a second
+    combine at the root (level 2).  Root ingest and root-visible mask
+    state drop from O(S) to O(G); each client's pair-seed state drops
+    from O(S) to O(M).
+
+    Bit-identity — the whole point of the construction:
+
+    * secure inner: level 1 is the Bonawitz masked sum over the group
+      (per-group mask streams, key folded with the *global* group id so
+      no two groups ever share a stream), producing an int32 ring
+      partial; level 2 re-masks those partials **directly in Z_{2^32}**
+      (:func:`repro.kernels.ops.secure_ring_partial_sum`, streams
+      domain-separated by the kernel's group tag) — no dequantize/
+      requantize round trip.  Since mod-2^32 addition is exactly
+      associative and every mask cancels at its level, the root equals
+      the flat masked sum *bit-for-bit*.
+    * linear inner (plain / sampled): level 2 is a plain sum of group
+      sums — identical to the flat sum whenever the float additions are
+      exact (e.g. on-grid messages), and the trajectory-level contract
+      is the same regrouping-of-a-sum argument.
+
+    Level-2 dispatch is by *dtype*: int32 group partials (any ring-
+    -quantizing inner) get the masked ring merge, float partials a plain
+    sum — so the combinator composes with future inner strategies
+    without knowing their class.
+
+    ``groups=1`` degenerates to the inner aggregation (one group holding
+    the whole cohort, level 2 a no-op sum over one row).  Nesting
+    ``Hierarchical`` inside ``Hierarchical`` is rejected — the mesh and
+    the PRF domain separation are built for exactly two levels.
+    """
+    inner: Any
+    groups: int
+
+    needs_messages = True
+
+    def __post_init__(self):
+        g = self.groups
+        if isinstance(g, bool) or not isinstance(g, (int, np.integer)) \
+                or int(g) < 1:
+            raise ValueError(f"groups={g!r} must be a positive int")
+        if isinstance(self.inner, HierarchicalAggregation):
+            raise ValueError("Hierarchical(Hierarchical(...)) is not "
+                             "supported: the tree has exactly two levels")
+
+    # -- delegation: who participates and with what weights ------------
+
+    def cohort_size(self, num_clients: int) -> int:
+        s = self.inner.cohort_size(num_clients)
+        if self.groups > s:
+            raise ValueError(
+                f"groups={self.groups} exceeds the cohort size {s}")
+        return s
+
+    def cohort_weights(self, weights, combine, num_clients):
+        return self.inner.cohort_weights(weights, combine, num_clients)
+
+    @property
+    def scale_bits(self):
+        """The inner fixed-point grid (None for linear inners) — exposed
+        so the engine's compressor/aggregation grid check sees through
+        the tree."""
+        return getattr(self.inner, "scale_bits", None)
+
+    def members(self, num_clients: int) -> int:
+        """M, the per-group member count: ⌈S/G⌉ (the last group is
+        sentinel-padded when G ∤ S)."""
+        s = self.cohort_size(num_clients)
+        return -(-s // self.groups)
+
+    def _ring_inner(self) -> bool:
+        return getattr(self.inner, "scale_bits", None) is not None
+
+    # -- the tree ------------------------------------------------------
+
+    def tree_combine(self, grouped: PyTree, key, *, group_offset=0,
+                     member_offset=0, members: Optional[int] = None,
+                     num_groups: Optional[int] = None,
+                     reduce_members=None, reduce_groups=None) -> PyTree:
+        """The two-level combine over group-blocked messages.
+
+        ``grouped`` leaves carry a leading (G_loc, M_loc, ...) — the
+        local slice of the (G, M) grid.  Level 1 runs the inner
+        ``partial_combine`` per group row with the round key folded by
+        the **global** group id (member positions [member_offset,
+        member_offset + M_loc) of ``members``); ``reduce_members`` (the
+        engine's psum over the mesh's "clients" axis, or None when every
+        member is local) completes the group sums.  Level 2 merges the
+        local group rows — masked in the ring for int32 partials, plain
+        sum for float — and ``reduce_groups`` (psum over "groups")
+        completes the root.  Returns the *pre-finalize* aggregate, same
+        contract as ``partial_combine``.
+        """
+        g_loc = jax.tree.leaves(grouped)[0].shape[0]
+        m = jax.tree.leaves(grouped)[0].shape[1] if members is None \
+            else int(members)
+        ng = self.groups if num_groups is None else int(num_groups)
+        gids = jnp.arange(g_loc, dtype=jnp.uint32) \
+            + jnp.asarray(group_offset).astype(jnp.uint32)
+
+        # lax.scan, not vmap: the inner masked sum pushes its uploads
+        # through optimization_barrier (no batching rule), and scan also
+        # keeps the trace O(1) in the local group count
+        def one_group(_, xs):
+            rows, gid = xs
+            return None, self.inner.partial_combine(
+                rows, jax.random.fold_in(key, gid), member_offset, m)
+
+        _, level1 = jax.lax.scan(one_group, None, (grouped, gids))
+        if reduce_members is not None:
+            level1 = reduce_members(level1)
+        if all(x.dtype == jnp.int32 for x in jax.tree.leaves(level1)):
+            partial = _kops.secure_ring_partial_sum(
+                level1, jax.random.key_data(key),
+                group_offset=group_offset, num_groups=ng)
+        else:
+            partial = _sum_clients(level1)
+        if reduce_groups is not None:
+            partial = reduce_groups(partial)
+        return partial
+
+    def _group(self, wmsgs: PyTree, cohort: int) -> PyTree:
+        """(S, ...) leaves → (G, M, ...): zero-pad the cohort axis to
+        G·M (sentinel members — quantize to 0, masks still cancel) and
+        block contiguously.  The schedule's group permutation has
+        already reordered the cohort, so blocking is a reshape."""
+        g = self.groups
+        m = -(-cohort // g)
+        pad = g * m - cohort
+
+        def blk(x):
+            if pad:
+                x = jnp.concatenate(
+                    [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+            return x.reshape(g, m, *x.shape[1:])
+
+        return jax.tree.map(blk, wmsgs)
+
+    def partial_combine(self, wmsgs, key, cohort_offset, cohort_size):
+        if not (isinstance(cohort_offset, int) and cohort_offset == 0):
+            raise ValueError(
+                "HierarchicalAggregation only decomposes over a 2-D "
+                "(groups, clients) mesh (launch.mesh.make_group_mesh); "
+                "a flat cohort shard cannot host the two reductions")
+        del cohort_size
+        s = jax.tree.leaves(wmsgs)[0].shape[0]
+        return self.tree_combine(self._group(wmsgs, s), key)
+
+    def finalize_combine(self, partial):
+        return self.inner.finalize_combine(partial)
+
+    def combine_messages(self, wmsgs, key):
+        return self.finalize_combine(self.partial_combine(wmsgs, key, 0,
+                                                          None))
+
+    # -- communication-ledger hooks ------------------------------------
+
+    def participants(self, num_clients: int) -> int:
+        return self.inner.participants(num_clients)
+
+    def uplink_wire_bytes(self, payload_bytes: int, dense_elements: int,
+                          num_clients: int) -> int:
+        """Per-client wire under the tree: a secure inner exchanges pair
+        seeds with its M−1 *group* peers only (O(S/G), not O(S)); the
+        masked payload itself is unchanged.  Linear inners are untouched
+        by grouping."""
+        if self._ring_inner():
+            return self.inner.wire_bytes_for_peers(
+                dense_elements, self.members(num_clients) - 1)
+        return self.inner.uplink_wire_bytes(payload_bytes, dense_elements,
+                                            num_clients)
+
+    def group_uplink_bytes(self, payload_bytes: int, dense_elements: int,
+                           num_clients: int) -> int:
+        """Level-2 wire: each of the G edge aggregators uploads one
+        group partial to the root — a dense ring element plus G−1 group-
+        level pair seeds for a secure inner, the plain payload
+        otherwise.  This is also the root's ingest."""
+        del num_clients
+        if self._ring_inner():
+            return self.groups * self.inner.wire_bytes_for_peers(
+                dense_elements, self.groups - 1)
+        return self.groups * payload_bytes
+
+    # -- bench bookkeeping ---------------------------------------------
+
+    def mask_pair_count(self, num_clients: int) -> int:
+        """Live pair-mask streams per round: G·M(M−1)/2 within groups
+        plus G(G−1)/2 across them (0 for a maskless inner).  Flat secure
+        holds S(S−1)/2."""
+        if not self._ring_inner():
+            return 0
+        g, m = self.groups, self.members(num_clients)
+        return g * (m * (m - 1) // 2) + g * (g - 1) // 2
+
+    def root_ingest_bytes(self, dense_elements: int,
+                          num_clients: int) -> int:
+        """Bytes crossing into the root per round: G group partials
+        (4-byte ring words / f32) instead of S client uploads."""
+        del num_clients
+        return self.groups * 4 * dense_elements
+
+
 def plain() -> PlainAggregation:
     return PlainAggregation()
 
@@ -349,3 +567,10 @@ def secure(scale_bits: int = 20, streaming: bool = True,
 
 def sampled(num_sampled: int) -> SampledClients:
     return SampledClients(num_sampled=num_sampled)
+
+
+def hierarchical(inner: Optional[Any] = None,
+                 groups: int = 16) -> HierarchicalAggregation:
+    """Two-level tree over ``inner`` (default: streaming secure)."""
+    return HierarchicalAggregation(
+        inner=secure() if inner is None else inner, groups=groups)

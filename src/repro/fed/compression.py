@@ -322,6 +322,13 @@ def round_bytes(algorithm, aggregation, compressor, params,
       ``params`` per participating client, plus any compressor-declared
       per-client extra (``extra_downlink_bytes``: e.g. the k unsketch
       support indices clients need for their error-feedback debit).
+
+    A hierarchical aggregation adds a second uplink hop — the G edge
+    aggregators forwarding their group partials to the root — declared
+    via ``group_uplink_bytes`` and added to the round total (and to the
+    breakdown) without inflating the *per-client* charge: grouping is
+    exactly the trade of O(S) root ingest for O(S/G) client peers plus
+    this O(G) edge-to-root term.
     """
     comp = compressor if compressor is not None else identity()
     elements, leaves, elem_bytes = algorithm.upload_spec(params)
@@ -331,12 +338,15 @@ def round_bytes(algorithm, aggregation, compressor, params,
     per_client = aggregation.uplink_wire_bytes(payload, wire_el,
                                                num_clients)
     participants = aggregation.participants(num_clients)
+    group_up = aggregation.group_uplink_bytes(
+        payload, wire_el, num_clients) \
+        if hasattr(aggregation, "group_uplink_bytes") else 0
     down = _param_bytes(params)
     if hasattr(comp, "extra_downlink_bytes"):
         down += comp.extra_downlink_bytes(elements)
     return RoundBytes(
         uplink_per_client=per_client,
-        uplink_total=per_client * participants,
+        uplink_total=per_client * participants + group_up,
         downlink_per_client=down,
         downlink_total=down * participants,
         participants=participants,
@@ -348,4 +358,5 @@ def round_bytes(algorithm, aggregation, compressor, params,
             "upload_leaves": leaves,
             "upload_elem_bytes": elem_bytes,
             "wire_overhead_bytes": per_client - payload,
+            "group_uplink_bytes": group_up,
         })

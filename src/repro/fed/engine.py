@@ -71,7 +71,7 @@ import numpy as np
 
 from repro.core.protocol import FedAlgorithm
 from repro.data.partition import (Partition, sample_cohorts,
-                                  sample_schedule)
+                                  sample_groups, sample_schedule)
 from repro.fed import compression as compression_mod
 from repro.fed.aggregation import Aggregation, PlainAggregation
 from repro.launch import mesh as mesh_mod
@@ -235,7 +235,8 @@ def _round_ids(rounds: int, local_steps: int, e_axis: bool) -> np.ndarray:
 
 def build_schedule(part: Partition, batch_size: int, rounds: int,
                    local_steps: int, seed: int, e_axis: bool = False,
-                   cohort_size: Optional[int] = None):
+                   cohort_size: Optional[int] = None,
+                   groups: Optional[int] = None):
     """The scan-visible schedule: per-round cohorts plus their batches.
 
     Returns ``(cohorts, idx)`` — ``cohorts`` is (T, S) sorted client ids
@@ -245,6 +246,14 @@ def build_schedule(part: Partition, batch_size: int, rounds: int,
     the E axis is kept even for E = 1, since the client scans it as
     local steps; the round's cohort is shared by its E local steps).
 
+    ``groups`` (hierarchical aggregation) applies the per-round group
+    permutation (:func:`repro.data.partition.sample_groups`) to each
+    cohort row, so group g of the two-level tree is the contiguous block
+    [g·M, (g+1)·M).  The batch draw is keyed on *client ids*, not row
+    positions, so permuting the cohort never changes any client's
+    batches — the participating set, weights and per-client samples are
+    identical with or without grouping.
+
     Index memory is O(T·S·B): with S ≪ I the old (T·E, I, B) tensor is
     never allocated (pinned by ``tests/test_population.py``).
     """
@@ -252,6 +261,11 @@ def build_schedule(part: Partition, batch_size: int, rounds: int,
     s = i if cohort_size is None else int(cohort_size)
     cohorts = sample_cohorts(i, s, np.arange(1, rounds + 1,
                                              dtype=np.int64), seed)
+    if groups is not None and int(groups) > 1:
+        perm = sample_groups(s, int(groups),
+                             np.arange(1, rounds + 1, dtype=np.int64),
+                             seed)
+        cohorts = np.take_along_axis(cohorts, perm, axis=1)
     ids = _round_ids(rounds, local_steps, e_axis)
     per_id = cohorts if not e_axis \
         else np.repeat(cohorts, local_steps, axis=0)
@@ -354,9 +368,10 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
     combine = algorithm.combine
     compressed = compressor is not None
     sketched = compressed and getattr(compressor, "sketched", False)
+    g_tot = getattr(aggregation, "groups", None)
 
     def chunk(params, state, cstate, x_train, y_train, weights, key_data,
-              cohort_chunk, idx_chunk, ts, shard=None):
+              cohort_chunk, idx_chunk, ts, shard=None, hier=None):
         session_key = jax.random.wrap_key_data(key_data)
         num_clients = weights.shape[0]
 
@@ -372,14 +387,61 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
             live_full = cohort_t < num_clients
             w_c = jnp.where(live_full, weights[cohort_t], 0.0)
             rw_full = aggregation.cohort_weights(w_c, combine, num_clients)
-            s_loc = idx_t.shape[0]
             offset = 0
             rw, cids, live = rw_full, cohort_t, live_full
+            if hier is not None:
+                # 2-D (groups, clients) mesh: the replicated flat cohort
+                # row is blocked (G, M_pad); this device owns the
+                # (g_loc, m_loc) tile at (g_off, m_off) and flattens it
+                # back to a local cohort slice for the upload vmap
+                g_loc, m_loc = idx_t.shape[0], idx_t.shape[1]
+                m_pad = cohort_t.shape[0] // g_tot
+                g_off = jax.lax.axis_index(hier[0]) * g_loc
+                m_off = jax.lax.axis_index(hier[1]) * m_loc
+
+                def _tile(v):
+                    return jax.lax.dynamic_slice(
+                        v.reshape(g_tot, m_pad), (g_off, m_off),
+                        (g_loc, m_loc)).reshape(-1)
+
+                rw, cids, live = (_tile(rw_full), _tile(cohort_t),
+                                  _tile(live_full))
+                idx_t = idx_t.reshape((g_loc * m_loc,) + idx_t.shape[2:])
+            s_loc = idx_t.shape[0]
             if shard is not None:
                 offset = jax.lax.axis_index(shard) * s_loc
                 rw = jax.lax.dynamic_slice(rw_full, (offset,), (s_loc,))
                 cids = jax.lax.dynamic_slice(cohort_t, (offset,), (s_loc,))
                 live = jax.lax.dynamic_slice(live_full, (offset,), (s_loc,))
+
+            def _combine(msgs, key):
+                # the one aggregation entry point of every message path:
+                # single-device uses the strategy's full-view combine
+                # (messages merge linearly, so the sharded variants
+                # below reproduce it bit-for-bit); a 1-D client mesh
+                # psums the strategy's partial; the 2-D group mesh
+                # routes through the hierarchical tree — level 1 psums
+                # inner partials over the members axis, level 2 merges
+                # the group partials (masked in the ring for a secure
+                # inner) and psums over the groups axis.
+                if hier is not None:
+                    grouped = jax.tree.map(
+                        lambda x: x.reshape((g_loc, m_loc) + x.shape[1:]),
+                        msgs)
+                    return aggregation.finalize_combine(
+                        aggregation.tree_combine(
+                            grouped, key, group_offset=g_off,
+                            member_offset=m_off, members=m_pad,
+                            num_groups=g_tot,
+                            reduce_members=lambda p: jax.lax.psum(
+                                p, hier[1]),
+                            reduce_groups=lambda p: jax.lax.psum(
+                                p, hier[0])))
+                if shard is None:
+                    return aggregation.combine_messages(msgs, key)
+                return aggregation.finalize_combine(
+                    jax.lax.psum(aggregation.partial_combine(
+                        msgs, key, offset, cohort_t.shape[0]), shard))
 
             if not compressed and combine == "sum" \
                     and not aggregation.needs_messages:
@@ -426,7 +488,21 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                     return jnp.where(m, c, jnp.zeros_like(c))
 
                 def _scatter_resid(cstate, new_resid):
-                    if shard is None:
+                    if hier is not None:
+                        # two ordered cohort-sized collectives rebuild
+                        # the whole (G·M_pad, …) update block on every
+                        # device, slot order matching the flat cohort
+                        # row, so the replicated arena stays replicated
+                        def _gather2(u):
+                            u = u.reshape((g_loc, m_loc) + u.shape[1:])
+                            u = jax.lax.all_gather(u, hier[1], axis=1,
+                                                   tiled=True)
+                            u = jax.lax.all_gather(u, hier[0], axis=0,
+                                                   tiled=True)
+                            return u.reshape((-1,) + u.shape[2:])
+                        upd = jax.tree.map(_gather2, new_resid)
+                        at_ids = cohort_t
+                    elif shard is None:
                         upd, at_ids = new_resid, cids
                     else:
                         # cohort-sized collective: every device sees all
@@ -454,17 +530,6 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                             lambda d, r: rw.reshape(
                                 (-1,) + (1,) * (d.ndim - 1))
                             * d.astype(jnp.float32) + r, raw, resid)
-
-                    def _combine(msgs, key):
-                        # the sketches / phase-2 values merge linearly,
-                        # so the secure masked Z_{2^32} sum equals the
-                        # single-device aggregate bit-for-bit
-                        if shard is None:
-                            return aggregation.combine_messages(msgs, key)
-                        return aggregation.finalize_combine(
-                            jax.lax.psum(aggregation.partial_combine(
-                                msgs, key, offset, cohort_t.shape[0]),
-                                shard))
 
                     # phase 1: masked sketch sum → top-k support
                     sk = _gate(jax.vmap(
@@ -522,13 +587,7 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                     lambda m: m * rw.reshape((-1,) + (1,) * (m.ndim - 1)),
                     raw)
 
-            if shard is None:
-                agg = aggregation.combine_messages(msgs, key_t)
-            else:
-                partial = aggregation.partial_combine(
-                    msgs, key_t, offset, cohort_t.shape[0])
-                agg = aggregation.finalize_combine(
-                    jax.lax.psum(partial, shard))
+            agg = _combine(msgs, key_t)
             params, state = algorithm.server_step(params, state, agg)
             return RoundCarry(params, state, cstate), None
 
@@ -540,8 +599,28 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
     if mesh is None:
         return jax.jit(chunk, donate_argnums=(0, 1, 2, 7, 8))
 
-    axis = mesh.axis_names[0]
     spec = jax.sharding.PartitionSpec
+    if tuple(mesh.axis_names) == ("groups", "clients"):
+        # hierarchical 2-D mesh: idx_chunk arrives group-blocked
+        # (T, G, M_pad, …) from run() and shards its (group, member)
+        # dims; the flat (T, G·M_pad) cohort rows, weights and arena are
+        # replicated, and both tree reductions are psums inside the body
+        hier_axes = mesh.axis_names
+
+        def hier_body(params, state, cstate, x_train, y_train, weights,
+                      key_data, cohort_chunk, idx_chunk, ts):
+            return chunk(params, state, cstate, x_train, y_train,
+                         weights, key_data, cohort_chunk, idx_chunk, ts,
+                         hier=hier_axes)
+
+        fn = mesh_mod.shard_map_fn(
+            hier_body, mesh,
+            in_specs=(spec(),) * 8 + (spec(None, "groups", "clients"),
+                                      spec()),
+            out_specs=(spec(), spec(), spec()))
+        return jax.jit(fn, donate_argnums=(0, 1, 2, 7, 8))
+
+    axis = mesh.axis_names[0]
 
     def sharded_body(params, state, cstate, x_train, y_train, weights,
                      key_data, cohort_chunk, idx_chunk, ts):
@@ -558,6 +637,32 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                   spec(), spec(), spec(None, axis), spec()),
         out_specs=(spec(), spec(), spec()))
     return jax.jit(fn, donate_argnums=(0, 1, 2, 7, 8))
+
+
+def _block_schedule(cohorts, schedule, g: int, m: int, m_pad: int,
+                    sentinel: int):
+    """Group-block a (T, S) cohort / (T, S, …) index schedule for the
+    2-D hierarchical mesh: cohorts come back flat (T, G·M_pad) with each
+    group's members contiguous, the schedule comes back (T, G, M_pad, …)
+    ready to shard ``P(None, "groups", "clients")``.  Sentinel slots
+    (id = ``sentinel``, zero round weight, index-0 batches) fill the
+    last group's tail (G ∤ S) and the member-axis pad (shards ∤ M)."""
+    t, s = cohorts.shape
+    pad1 = g * m - s
+    if pad1:
+        cohorts = np.concatenate(
+            [cohorts, np.full((t, pad1), sentinel, cohorts.dtype)], 1)
+        schedule = np.pad(
+            schedule, [(0, 0), (0, pad1)] + [(0, 0)] * (schedule.ndim - 2))
+    cohorts = cohorts.reshape(t, g, m)
+    schedule = schedule.reshape((t, g, m) + schedule.shape[2:])
+    pad2 = m_pad - m
+    if pad2:
+        cohorts = np.pad(cohorts, [(0, 0), (0, 0), (0, pad2)],
+                         constant_values=sentinel)
+        schedule = np.pad(schedule, [(0, 0), (0, 0), (0, pad2)]
+                          + [(0, 0)] * (schedule.ndim - 3))
+    return cohorts.reshape(t, g * m_pad), schedule
 
 
 def _upload_avals(algorithm: FedAlgorithm, x_train, y_train,
@@ -628,24 +733,51 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
             "the 2^-scale_bits fixed-point grid and the secure masked sum "
             "is only exact when the grids match")
     cohort = aggregation.cohort_size(part.num_clients)   # validates range
+    groups = getattr(aggregation, "groups", None)
     if params is None:
         params = task.init_params(jax.random.key(seed))
     cohorts, schedule = build_schedule(part, batch_size, rounds,
                                        algorithm.local_steps, seed,
                                        e_axis=algorithm.combine == "mean",
-                                       cohort_size=cohort)
+                                       cohort_size=cohort, groups=groups)
     if mesh is not None:
-        ndev = mesh.shape[mesh.axis_names[0]]
-        pad = (-cohort) % ndev
-        if pad:
-            # pad the cohort to a device multiple with the sentinel id I
-            # (zero round weight, writes dropped) so D ∤ S still runs —
-            # S = 1 on a 2-device mesh included
-            cohorts = np.concatenate(
-                [cohorts,
-                 np.full((rounds, pad), part.num_clients, np.int64)], 1)
-            widths = [(0, 0), (0, pad)] + [(0, 0)] * (schedule.ndim - 2)
-            schedule = np.pad(schedule, widths)
+        axes = tuple(mesh.axis_names)
+        if groups is not None:
+            if axes != ("groups", "clients"):
+                raise ValueError(
+                    "HierarchicalAggregation shards over a 2-D "
+                    "(groups, clients) mesh — launch.mesh.make_group_mesh"
+                    f" — not axes {axes}: a flat cohort shard cannot "
+                    "host the tree's two reductions")
+            dg, dc = mesh.shape["groups"], mesh.shape["clients"]
+            g = int(groups)
+            if g % dg:
+                raise ValueError(
+                    f"groups={g} must be a multiple of the mesh's groups"
+                    f" axis ({dg} shards): a group cannot span the axis "
+                    "its level-2 combine reduces over")
+            m = -(-cohort // g)
+            m_pad = -(-m // dc) * dc
+            cohorts, schedule = _block_schedule(cohorts, schedule, g, m,
+                                                m_pad, part.num_clients)
+        elif axes == ("groups", "clients"):
+            raise ValueError(
+                "a (groups, clients) mesh needs a "
+                "HierarchicalAggregation — flat strategies shard over "
+                "the 1-D make_client_mesh")
+        else:
+            ndev = mesh.shape[axes[0]]
+            pad = (-cohort) % ndev
+            if pad:
+                # pad the cohort to a device multiple with the sentinel
+                # id I (zero round weight, writes dropped) so D ∤ S
+                # still runs — S = 1 on a 2-device mesh included
+                cohorts = np.concatenate(
+                    [cohorts,
+                     np.full((rounds, pad), part.num_clients, np.int64)],
+                    1)
+                widths = [(0, 0), (0, pad)] + [(0, 0)] * (schedule.ndim - 2)
+                schedule = np.pad(schedule, widths)
     cohort_dev = jnp.asarray(cohorts, jnp.int32)             # one transfer
     idx_dev = jnp.asarray(schedule, jnp.int32)               # one transfer
     x_train = _staged(data.x_train)

@@ -133,6 +133,40 @@ def secure_quant_sum(wmsgs: PyTree, key_data, *, scale_bits: int,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def secure_ring_partial_sum(partials: PyTree, key_data, *, group_offset=0,
+                            num_groups: Optional[int] = None) -> PyTree:
+    """Group-level masked merge of already-quantized partial sums.
+
+    Level 2 of the hierarchical tree: every leaf carries a leading group
+    axis (G_loc, ...) of **int32 ring elements** (the within-group masked
+    sums of level 1).  Flattens the tree, re-masks each group partial
+    with the directed counter-mode streams keyed by the *group-tagged*
+    round key (:func:`repro.kernels.secure_agg.group_key_words` —
+    domain-separated from all client-level streams), and sums with int32
+    wraparound.  No dequantize/requantize round trip: the masking acts
+    directly in Z_{2^32}, so psum of the returned pytree over the group
+    axis equals the plain sum of all partials bit-for-bit.
+
+    ``group_offset``/``num_groups`` give the shard's global group ids,
+    mirroring :func:`secure_quant_sum`'s client ids.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(partials)
+    g_loc = leaves[0].shape[0]
+    shapes = [x.shape[1:] for x in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    ng = g_loc if num_groups is None else int(num_groups)
+    kd = jnp.asarray(key_data, jnp.uint32).reshape(-1)
+    key0, key1 = _sa.group_key_words(kd[0], kd[-1])
+    flat = jnp.concatenate(
+        [x.astype(jnp.int32).reshape(g_loc, -1) for x in leaves], axis=1)
+    agg = _sa.masked_ring_partial_sum(flat, key0, key1, group_offset, ng)
+    out, off = [], 0
+    for size, shape in zip(sizes, shapes):
+        out.append(agg[off:off + size].reshape(shape))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def secure_dequantize(agg_q: PyTree, scale_bits: int) -> PyTree:
     """int32 fixed-point aggregate pytree → f32 (grid 2^-scale_bits)."""
     return jax.tree.map(lambda q: _sa.dequantize(q, scale_bits), agg_q)

@@ -68,6 +68,15 @@ _M1 = np.uint32(0x7FEB352D)
 _M2 = np.uint32(0x846CA68B)
 _GOLD = np.uint32(0x9E3779B9)
 
+# Domain-separation tag of the **group level** of the hierarchical
+# two-level tree (fed/aggregation.py Hierarchical): group partials are
+# re-masked across the G edge aggregators with streams keyed on the
+# round key words XOR'd with this tag (same discipline as the sketch's
+# _PHASE2_TAG) — so a group-level (seed, counter) pair can never collide
+# with a client-level pair of the same round and no mask word is ever
+# reused across the two levels.
+_GROUP_TAG = np.uint32(0x47525550)
+
 
 def _mix32(x):
     """murmur3 fmix32 — a bijective avalanche on uint32."""
@@ -100,6 +109,18 @@ def mask_bits(seed, counters):
 
 def _i32(bits):
     return jax.lax.bitcast_convert_type(bits, jnp.int32)
+
+
+def group_key_words(key0, key1):
+    """Round key words for the tree's group level.
+
+    Both words are avalanched through :data:`_GROUP_TAG` so every group-
+    level ``pair_seed`` draws from a stream disjoint from the client-level
+    streams of the same round — the two levels of the hierarchy never
+    share a (seed, counter) pair even though they reuse the same PRF.
+    """
+    return (_mix32(jnp.asarray(key0, jnp.uint32) ^ _GROUP_TAG),
+            _mix32(jnp.asarray(key1, jnp.uint32) ^ _GROUP_TAG))
 
 
 def quantize(m, scale_bits: int):
@@ -179,23 +200,23 @@ def masked_sum_flat(msgs_flat, key_data, scale_bits: int):
     return out
 
 
-def masked_partial_sum_flat(msgs_flat, key_data, scale_bits: int,
-                            client_offset, num_clients: int):
-    """Shard-local streaming masked sum: (I_loc, n) f32 → (n,) int32.
+def masked_ring_partial_sum(q, key0, key1, client_offset,
+                            num_clients: int):
+    """Directed masked sum of already-quantized rows: (I_loc, n) int32 →
+    (n,) int32.
 
-    The local clients are global ids [offset, offset + I_loc); each
-    regenerates the directed mask streams against *all* peers (cross-
-    shard pairs are regenerated on both endpoint devices — counter-mode
-    makes the streams identical).  psum of the per-shard partials over
-    the client axis recovers the full-view aggregate bit-for-bit.
-    ``client_offset`` may be a traced scalar (``axis_index`` under
-    shard_map).
+    The ring-only core of :func:`masked_partial_sum_flat`, split out so
+    the hierarchical tree can re-mask *group partials* — which are
+    already int32 ring elements — without a dequantize/requantize round
+    trip (which is only exact below 2^24 and would break bit-identity
+    for accumulated sums).  Same directed-stream protocol: local rows
+    are global ids [offset, offset + I_loc), every peer stream is
+    regenerated locally, and a psum/plain sum over all shards cancels
+    every mask exactly (mod-2^32 associativity).
     """
-    i_loc, n = msgs_flat.shape
-    q = quantize(msgs_flat, scale_bits)
+    i_loc, n = q.shape
     if num_clients == 1:
         return q[0]
-    key0, key1 = key_data[0], key_data[1]
     if num_clients > UNROLL_MAX_CLIENTS:
         return _masked_partial_sum_scan(q, key0, key1, client_offset,
                                         num_clients)
@@ -217,6 +238,23 @@ def masked_partial_sum_flat(msgs_flat, key_data, scale_bits: int,
     for u in uploads[1:]:
         out = out + u
     return out
+
+
+def masked_partial_sum_flat(msgs_flat, key_data, scale_bits: int,
+                            client_offset, num_clients: int):
+    """Shard-local streaming masked sum: (I_loc, n) f32 → (n,) int32.
+
+    The local clients are global ids [offset, offset + I_loc); each
+    regenerates the directed mask streams against *all* peers (cross-
+    shard pairs are regenerated on both endpoint devices — counter-mode
+    makes the streams identical).  psum of the per-shard partials over
+    the client axis recovers the full-view aggregate bit-for-bit.
+    ``client_offset`` may be a traced scalar (``axis_index`` under
+    shard_map).
+    """
+    q = quantize(msgs_flat, scale_bits)
+    return masked_ring_partial_sum(q, key_data[0], key_data[1],
+                                   client_offset, num_clients)
 
 
 # ---------------------------------------------------------------------------

@@ -76,6 +76,24 @@ def make_client_mesh(num_shards: int = 0):
     return make_mesh((n,), ("clients",))
 
 
+def make_group_mesh(group_shards: int = 0, client_shards: int = 1):
+    """2-D (groups, clients) mesh for the hierarchical two-level tree.
+
+    The engine lays a round's (G groups × M members) grid directly onto
+    this mesh: the ``groups`` axis shards the G edge aggregators
+    (``group_shards`` must divide G), the ``clients`` axis shards the M
+    members *within* each group (members are sentinel-padded up to a
+    device multiple when client_shards ∤ M).  Level 1 of the tree is a
+    psum over ``clients``, level 2 a psum over ``groups`` — the same
+    in-pod-ICI / cross-pod-DCN lowering shape as the production
+    (pod, data) reduction, which is exactly the physical topology an
+    edge-aggregator deployment has.  ``group_shards=0`` spends every
+    local device on the groups axis.
+    """
+    g = group_shards or max(1, jax.local_device_count() // client_shards)
+    return make_mesh((g, client_shards), ("groups", "clients"))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -22,7 +22,7 @@ import numpy as np
 from repro.data import partition, synthetic
 from repro.fed import aggregation, compression, runtime
 from repro.fed import sketch as fsk
-from repro.launch.mesh import make_client_mesh
+from repro.launch.mesh import make_client_mesh, make_group_mesh
 
 
 def main():
@@ -109,6 +109,41 @@ def main():
                                  - np.asarray(h2.train_cost))))
     assert gap_sk < 5e-5, gap_sk
     print(f"sketch+secure params bitwise OK  cost gap {gap_sk:.2e}")
+
+    # hierarchical two-level tree on the 2-D (groups, clients) mesh:
+    # every cross-device reduction is an int32 ring psum (level-1 masked
+    # partials over members, level-2 ring-masked group partials over
+    # groups), so mesh == single-device — and tree == flat secure — are
+    # *bitwise* in the final params.  groups=4 with S=10 exercises both
+    # padding sources at once: G ∤ S (sentinel tail of the last group)
+    # and, on the (1 group-shard, 2 client-shard) layout, shards ∤ M.
+    hier = aggregation.hierarchical(aggregation.secure(), groups=4)
+    p_flat, _ = runtime.run_alg1(data, part, secure=True, **kw)
+    p_one, _ = runtime.run_alg1(data, part, aggregation=hier, **kw)
+    for layout, gmesh in (("2g1c", make_group_mesh(2, 1)),
+                          ("1g2c", make_group_mesh(1, 2))):
+        p_m, _ = runtime.run_alg1(data, part, aggregation=hier,
+                                  mesh=gmesh, **kw)
+        for a, b in zip(jax.tree.leaves(p_one), jax.tree.leaves(p_m)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print(f"hier secure on {layout} group mesh  params bitwise OK")
+    for a, b in zip(jax.tree.leaves(p_flat), jax.tree.leaves(p_one)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("hier secure == flat secure        params bitwise OK")
+
+    # the sketched two-phase wire and the EF residual arena (two ordered
+    # all_gathers) both survive the tree: bitwise vs single-device
+    hmesh = make_group_mesh(2, 1)
+    for cname, comp in (("topk8", compression.topk(0.2, bits=8)),
+                        ("sketch", fsk.sketch(rows=4, cols=512,
+                                              fraction=0.02, keep=64))):
+        p1h, _ = runtime.run_alg1(data, part, aggregation=hier,
+                                  compressor=comp, **kw)
+        p2h, _ = runtime.run_alg1(data, part, aggregation=hier,
+                                  compressor=comp, mesh=hmesh, **kw)
+        for a, b in zip(jax.tree.leaves(p1h), jax.tree.leaves(p2h)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print(f"hier secure + {cname} group mesh    params bitwise OK")
 
     # identity compression on the mesh is bit-identical to no compressor
     _, h_n = runtime.run_alg1(data, part, mesh=mesh, **kw)
