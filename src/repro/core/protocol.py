@@ -49,6 +49,22 @@ Aggregation semantics are declared, not hard-coded:
 All methods must be jit/vmap/scan-compatible: ``state`` is a pytree of
 arrays, ``client_upload`` is vmapped over the leading client axis of
 ``batch``, and ``server_step`` runs inside the scan body.
+
+**Delayed uploads** (the async engine's bounded-staleness mode): a
+client that computed at round t−τ uploads against the *params of that
+round* — the engine gathers them from a ring buffer of recent
+snapshots and calls ``client_upload`` with the historical params.  The
+protocol addition is :meth:`FedAlgorithm.client_state`: the slice of
+server state a client's upload actually reads, which must be
+snapshotted alongside params for the replay to be faithful.  Sum-
+combine algorithms here upload pure gradients of (params, batch) — the
+state argument is ignored — so the default is the empty tuple and the
+ring carries params only; FedAvg's local SGD reads the round counter
+(its lr schedule), so it returns the full ``CounterState``.  The
+aggregated estimate a delayed cohort produces is exactly the CSSCA
+delayed-information regime (arXiv 1801.08266 §V): the surrogate
+recursion contracts bounded-delay perturbations, no algorithm change
+needed.
 """
 from __future__ import annotations
 
@@ -93,6 +109,8 @@ class FedAlgorithm(Protocol):
     def client_upload(self, params: PyTree, state: PyTree,
                       batch: Any) -> PyTree: ...
 
+    def client_state(self, state: PyTree) -> PyTree: ...
+
     def server_step(self, params: PyTree, state: PyTree,
                     agg: PyTree) -> tuple[PyTree, PyTree]: ...
 
@@ -117,6 +135,17 @@ class _Base:
 
     def client_weights(self, part, batch_size: int) -> np.ndarray:
         return part.weights(batch_size)            # N_i / (B·N)
+
+    def client_state(self, state) -> PyTree:
+        """The state slice ``client_upload`` reads — what the async
+        engine must snapshot in its staleness ring buffer next to the
+        params.  Sum-combine uploads here are pure functions of (params,
+        batch): nothing to snapshot.  If this returns non-empty, it must
+        be a pytree ``client_upload`` accepts *as its state argument*
+        (the engine replays the upload with the historical snapshot in
+        place of the live state)."""
+        del state
+        return ()
 
     def round_metrics(self, state) -> Dict[str, float]:
         return {}
@@ -254,6 +283,11 @@ class FedAvg(_Base):
     def client_upload(self, params, state, batch):
         lr = self.hp.lr(state.step.astype(jnp.float32))
         return fedavg.local_sgd(self.loss_fn, self.hp)(params, batch, lr)
+
+    def client_state(self, state):
+        # local SGD reads the round counter (lr schedule): a delayed
+        # client must replay with the lr of the round it computed at
+        return state
 
     def server_step(self, params, state, agg):
         return agg, CounterState(step=state.step + 1)

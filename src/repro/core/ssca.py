@@ -25,6 +25,16 @@ and the iterate moves by (4):  ω^{t+1} = (1 − γ^t) ω^t + γ^t ω̄^t.
 Everything here is pure-functional and jit/pjit friendly: the server update
 is elementwise over the (sharded) state, so no collectives beyond the
 gradient aggregation are introduced.
+
+**Bounded delay.**  Nothing in the recursion requires ĝ^t to be computed
+at ω^t: the CSSCA convergence framework (arXiv 1801.08266) only needs
+the surrogate error to vanish in the ρ-averaged limit, and a gradient
+evaluated at ω^{t−τ} with τ ≤ K perturbs lin^t by O(ρ^t · Σ‖ω^{t−j+1} −
+ω^{t−j}‖) — a term the diminishing γ-schedule shrinks and the (1−ρ)
+averaging contracts.  This is what the async engine relies on: stale
+uploads (from the staleness ring buffer, discounted per
+:mod:`repro.fed.staleness`) enter the same recursion unchanged, and an
+all-fresh round is bit-identical to the synchronous path.
 """
 from __future__ import annotations
 

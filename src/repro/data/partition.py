@@ -35,6 +35,13 @@ _COHORT_STREAM = 0xC0407
 # sample — only how the cohort slots are blocked into groups.
 _GROUP_STREAM = 0x6409
 
+# Sub-stream tag of the per-round staleness draw (async engine): the
+# integer delay of every cohort slot is drawn on its own stream, so
+# turning async simulation on or off never perturbs participation,
+# batches, or grouping — only *which round's params* each slot computed
+# against.
+_STALE_STREAM = 0x57A1E
+
 # Per-round transient budget of the batch draw, in elements: the
 # (block, width) key/pad matrices of sample_schedule hold at most this
 # many entries per array, whatever the partition's skew (~4 MB of f32
@@ -230,6 +237,58 @@ def sample_groups(cohort_size: int, num_groups: int, round_ids,
             np.random.SeedSequence([seed, int(t), _GROUP_STREAM]))
         out[k] = rng.permutation(s)
     return out
+
+
+def sample_staleness(cohort_size: int, round_ids, seed: int = 0,
+                     delay_probs=None) -> np.ndarray:
+    """Per-round staleness trace for the async engine: (T, S) integer
+    delays, slot i of round t computed its upload against the params of
+    round t − τ.  Drawn seed-stable per (seed, round id) on its own rng
+    stream (:data:`_STALE_STREAM` — independent of the cohort, batch and
+    group draws, so async simulation never perturbs who participates or
+    what they sample).
+
+    ``delay_probs`` — the delay distribution.  ``None`` is the all-zero
+    trace (every slot fresh: async degenerates to the synchronous
+    engine, no rng consumed).  A 1-D array p of length D draws
+    τ ∈ {0, …, D−1} with P(τ=d) = p[d] iid per slot; a 2-D (T, D) array
+    gives each round its own distribution (diurnal straggler cycles —
+    row k applies to ``round_ids[k]``).  Probabilities are normalized
+    row-wise.  Delays at or past the engine's staleness bound K+1 become
+    *dropouts* — the trace itself is unbounded so the dropout rate is a
+    property of (trace, K), not of the draw.
+
+    Early rounds clip naturally in the engine: round t has only t
+    predecessors, so an effective delay of min(τ, t) applies (the ring
+    buffer is seeded with the initial params).
+    """
+    s = int(cohort_size)
+    if s < 1:
+        raise ValueError(f"cohort_size={s} must be >= 1")
+    round_ids = np.asarray(round_ids, np.int64)
+    if delay_probs is None:
+        return np.zeros((len(round_ids), s), np.int64)
+    p = np.asarray(delay_probs, np.float64)
+    if p.ndim == 1:
+        p = np.broadcast_to(p, (len(round_ids), p.shape[0]))
+    if p.ndim != 2 or p.shape[0] != len(round_ids):
+        raise ValueError(
+            f"delay_probs shape {np.shape(delay_probs)} is neither (D,) "
+            f"nor (T={len(round_ids)}, D)")
+    if (p < 0).any() or (p.sum(axis=1) <= 0).any():
+        raise ValueError("delay_probs rows must be nonnegative with a "
+                         "positive sum")
+    p = p / p.sum(axis=1, keepdims=True)
+    out = np.empty((len(round_ids), s), np.int64)
+    for k, t in enumerate(round_ids):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, int(t), _STALE_STREAM]))
+        # inverse-CDF draw, vectorized over the S slots
+        u = rng.random(s)
+        out[k] = np.searchsorted(np.cumsum(p[k]), u, side="right")
+    # float round-off in the cumsum can push searchsorted one past the
+    # last bucket; clip back into the support
+    return np.minimum(out, p.shape[1] - 1)
 
 
 def sample_schedule(partition: Partition, batch_size: int,

@@ -102,10 +102,10 @@ class Aggregation(Protocol):
     def cohort_weights(self, weights: jnp.ndarray, combine: str,
                        num_clients: int) -> jnp.ndarray: ...
 
-    def combine_messages(self, wmsgs: PyTree, key) -> PyTree: ...
+    def combine_messages(self, wmsgs: PyTree, key, alive=None) -> PyTree: ...
 
     def partial_combine(self, wmsgs: PyTree, key, cohort_offset,
-                        cohort_size: int) -> PyTree: ...
+                        cohort_size: int, alive=None) -> PyTree: ...
 
     def finalize_combine(self, partial: PyTree) -> PyTree: ...
 
@@ -115,6 +115,8 @@ class Aggregation(Protocol):
 
     def uplink_wire_bytes(self, payload_bytes: int, dense_elements: int,
                           num_clients: int) -> int: ...
+
+    def recovery_bytes_per_drop(self, num_clients: int) -> int: ...
 
 
 def _sum_clients(wmsgs: PyTree) -> PyTree:
@@ -164,8 +166,12 @@ class _LinearCombine:
     def cohort_size(self, num_clients: int) -> int:
         return num_clients
 
-    def partial_combine(self, wmsgs, key, cohort_offset, cohort_size):
-        del key, cohort_offset, cohort_size
+    def partial_combine(self, wmsgs, key, cohort_offset, cohort_size,
+                        alive=None):
+        # a dropped linear client simply carries weight 0 (the engine's
+        # staleness reweighting already zeroed it) — no mask state to
+        # cancel, so ``alive`` needs no arithmetic here
+        del key, cohort_offset, cohort_size, alive
         return _sum_clients(wmsgs)
 
     def finalize_combine(self, partial):
@@ -179,6 +185,10 @@ class _LinearCombine:
         del dense_elements, num_clients
         return payload_bytes
 
+    def recovery_bytes_per_drop(self, num_clients: int) -> int:
+        del num_clients  # nothing to recover without masks
+        return 0
+
 
 @dataclasses.dataclass(frozen=True)
 class PlainAggregation(_LinearCombine):
@@ -190,8 +200,8 @@ class PlainAggregation(_LinearCombine):
         del combine, num_clients  # deterministic, full participation
         return weights
 
-    def combine_messages(self, wmsgs, key):
-        del key
+    def combine_messages(self, wmsgs, key, alive=None):
+        del key, alive
         return _sum_clients(wmsgs)
 
 
@@ -217,8 +227,8 @@ class SampledClients(_LinearCombine):
         return _cohort_reweight(weights, combine, num_clients,
                                 int(self.num_sampled))
 
-    def combine_messages(self, wmsgs, key):
-        del key  # selection already folded into the cohort schedule
+    def combine_messages(self, wmsgs, key, alive=None):
+        del key, alive  # selection already folded into the cohort schedule
         return _sum_clients(wmsgs)
 
     def participants(self, num_clients: int) -> int:
@@ -323,21 +333,32 @@ class SecureAggregation:
         instead of S−1 (the whole cohort)."""
         return 4 * dense_elements + 4 * peers
 
-    def partial_combine(self, wmsgs, key, cohort_offset, cohort_size):
+    def recovery_bytes_per_drop(self, num_clients: int) -> int:
+        """Seed-share recovery wire per dropped slot: each of the S−1
+        surviving peers uploads its 4-byte share of the dropped slot's
+        pair secret so the server can regenerate (and cancel) the ±PRG
+        streams the survivors' uploads still carry."""
+        return 4 * (self.cohort_size(num_clients) - 1)
+
+    def partial_combine(self, wmsgs, key, cohort_offset, cohort_size,
+                        alive=None):
         return _kops.secure_quant_sum(
             wmsgs, jax.random.key_data(key), scale_bits=self.scale_bits,
-            client_offset=cohort_offset, num_clients=cohort_size)
+            client_offset=cohort_offset, num_clients=cohort_size,
+            alive=alive)
 
     def finalize_combine(self, partial):
         return _kops.secure_dequantize(partial, self.scale_bits)
 
     # -- single-host combine -------------------------------------------
 
-    def combine_messages(self, wmsgs, key):
+    def combine_messages(self, wmsgs, key, alive=None):
         n = jax.tree.leaves(wmsgs)[0].shape[0]
-        if self.streaming:
+        if self.streaming or alive is not None:
+            # dropout recovery always runs the streaming path (the
+            # reference predates it; the two are bit-identical anyway)
             return self.finalize_combine(
-                self.partial_combine(wmsgs, key, 0, n))
+                self.partial_combine(wmsgs, key, 0, n, alive))
         # the retired O(P·model) mask-materializing path lives with the
         # kernel oracles and is imported only when explicitly requested
         from repro.kernels import ref as _ref
@@ -430,7 +451,8 @@ class HierarchicalAggregation:
     def tree_combine(self, grouped: PyTree, key, *, group_offset=0,
                      member_offset=0, members: Optional[int] = None,
                      num_groups: Optional[int] = None,
-                     reduce_members=None, reduce_groups=None) -> PyTree:
+                     reduce_members=None, reduce_groups=None,
+                     alive=None) -> PyTree:
         """The two-level combine over group-blocked messages.
 
         ``grouped`` leaves carry a leading (G_loc, M_loc, ...) — the
@@ -444,6 +466,12 @@ class HierarchicalAggregation:
         sum for float — and ``reduce_groups`` (psum over "groups")
         completes the root.  Returns the *pre-finalize* aggregate, same
         contract as ``partial_combine``.
+
+        ``alive`` (optional (G_loc, M) 0/1 rows) is dropout recovery with
+        a per-group blast radius: a dropped member's masks only ever
+        involve its M−1 group peers, so cancellation happens inside the
+        group's level-1 combine and no other group is touched.  Edge
+        aggregators are servers and never drop, so level 2 needs none.
         """
         g_loc = jax.tree.leaves(grouped)[0].shape[0]
         m = jax.tree.leaves(grouped)[0].shape[1] if members is None \
@@ -456,11 +484,17 @@ class HierarchicalAggregation:
         # through optimization_barrier (no batching rule), and scan also
         # keeps the trace O(1) in the local group count
         def one_group(_, xs):
-            rows, gid = xs
+            if alive is None:
+                rows, gid = xs
+                row_alive = None
+            else:
+                rows, gid, row_alive = xs
             return None, self.inner.partial_combine(
-                rows, jax.random.fold_in(key, gid), member_offset, m)
+                rows, jax.random.fold_in(key, gid), member_offset, m,
+                alive=row_alive)
 
-        _, level1 = jax.lax.scan(one_group, None, (grouped, gids))
+        xs = (grouped, gids) if alive is None else (grouped, gids, alive)
+        _, level1 = jax.lax.scan(one_group, None, xs)
         if reduce_members is not None:
             level1 = reduce_members(level1)
         if all(x.dtype == jnp.int32 for x in jax.tree.leaves(level1)):
@@ -490,7 +524,21 @@ class HierarchicalAggregation:
 
         return jax.tree.map(blk, wmsgs)
 
-    def partial_combine(self, wmsgs, key, cohort_offset, cohort_size):
+    def _group_alive(self, alive, cohort: int):
+        """(S,) alive bits → (G, M) rows.  Sentinel pads stay alive=1:
+        their uploads are exact zeros either way, and keeping their mask
+        streams live means the padded group's combine stays bit-identical
+        to the unpadded protocol (all pad masks cancel in the total)."""
+        g = self.groups
+        m = -(-cohort // g)
+        pad = g * m - cohort
+        alive = alive.astype(jnp.int32)
+        if pad:
+            alive = jnp.concatenate([alive, jnp.ones((pad,), jnp.int32)])
+        return alive.reshape(g, m)
+
+    def partial_combine(self, wmsgs, key, cohort_offset, cohort_size,
+                        alive=None):
         if not (isinstance(cohort_offset, int) and cohort_offset == 0):
             raise ValueError(
                 "HierarchicalAggregation only decomposes over a 2-D "
@@ -498,14 +546,16 @@ class HierarchicalAggregation:
                 "a flat cohort shard cannot host the two reductions")
         del cohort_size
         s = jax.tree.leaves(wmsgs)[0].shape[0]
-        return self.tree_combine(self._group(wmsgs, s), key)
+        if alive is not None:
+            alive = self._group_alive(alive, s)
+        return self.tree_combine(self._group(wmsgs, s), key, alive=alive)
 
     def finalize_combine(self, partial):
         return self.inner.finalize_combine(partial)
 
-    def combine_messages(self, wmsgs, key):
+    def combine_messages(self, wmsgs, key, alive=None):
         return self.finalize_combine(self.partial_combine(wmsgs, key, 0,
-                                                          None))
+                                                          None, alive))
 
     # -- communication-ledger hooks ------------------------------------
 
@@ -523,6 +573,14 @@ class HierarchicalAggregation:
                 dense_elements, self.members(num_clients) - 1)
         return self.inner.uplink_wire_bytes(payload_bytes, dense_elements,
                                             num_clients)
+
+    def recovery_bytes_per_drop(self, num_clients: int) -> int:
+        """Group-local seed-share recovery: only the dropped slot's M−1
+        group peers hold shares of its pair secret — the blast radius of
+        a drop is one group, not the cohort."""
+        if not self._ring_inner():
+            return self.inner.recovery_bytes_per_drop(num_clients)
+        return 4 * (self.members(num_clients) - 1)
 
     def group_uplink_bytes(self, payload_bytes: int, dense_elements: int,
                            num_clients: int) -> int:

@@ -71,8 +71,10 @@ import numpy as np
 
 from repro.core.protocol import FedAlgorithm
 from repro.data.partition import (Partition, sample_cohorts,
-                                  sample_groups, sample_schedule)
+                                  sample_groups, sample_schedule,
+                                  sample_staleness)
 from repro.fed import compression as compression_mod
+from repro.fed import staleness as staleness_mod
 from repro.fed.aggregation import Aggregation, PlainAggregation
 from repro.launch import mesh as mesh_mod
 
@@ -294,9 +296,10 @@ class RoundCarry(NamedTuple):
 
 @functools.lru_cache(maxsize=64)
 def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
-              compressor=None, mesh=None):
+              compressor=None, mesh=None, staleness=None):
     """The jitted scan-over-rounds body — the engine's *only* scan-body
-    builder — cached per (algorithm, aggregation, compressor, mesh).
+    builder — cached per (algorithm, aggregation, compressor, mesh,
+    staleness).
 
     ``compressor=None`` (or the identity, normalized to ``None`` by
     :func:`run`) keeps the compressor slot of the :class:`RoundCarry`
@@ -364,21 +367,67 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
     sized) and scattered identically on every device.  Sentinel-padded
     cohort slots (id = I, present when D ∤ S) carry exact-zero weights
     and are dropped from every scatter (``mode="drop"``).
+
+    ``staleness`` (a :class:`repro.fed.staleness.StalenessConfig`) turns
+    on the **async round mode**: the carry's params slot becomes a ring
+    buffer of the last K+1 (params, client-state) snapshots, every
+    cohort slot gathers its upload base from the ring at its trace delay
+    (delays past K are dropouts: weight forced to 0, residuals
+    untouched, and — under secure aggregation — the slot's pair masks
+    cancelled via the kernels' ``alive`` path), stale uploads are
+    discounted and the cohort weights renormalized
+    (:func:`repro.fed.staleness.discount_reweight`), and the new params
+    are pushed into the ring after ``server_step``.  Every inserted
+    operation is an exact identity on an all-zero trace (gathers of
+    ring slot 0, ``·1.0`` float scales, ``·1`` int32 mask gates), so
+    async-with-zero-trace reproduces the synchronous trajectories
+    bit-for-bit; the sync program itself is untouched (all branches are
+    trace-time constants).
     """
     combine = algorithm.combine
     compressed = compressor is not None
     sketched = compressed and getattr(compressor, "sketched", False)
     g_tot = getattr(aggregation, "groups", None)
+    is_async = staleness is not None
+    k_max = staleness.max_staleness if is_async else 0
 
     def chunk(params, state, cstate, x_train, y_train, weights, key_data,
-              cohort_chunk, idx_chunk, ts, shard=None, hier=None):
+              cohort_chunk, idx_chunk, *rest, shard=None, hier=None):
+        # async mode threads the (T, S) staleness trace chunk between
+        # the schedule and the round ids; params is then the snapshot
+        # ring (phist, cshist) instead of a bare pytree
+        if is_async:
+            stale_chunk, ts = rest
+        else:
+            (ts,) = rest
         session_key = jax.random.wrap_key_data(key_data)
         num_clients = weights.shape[0]
 
         def one_round(carry, xs):
-            params, state, cstate = carry
-            cohort_t, idx_t, t = xs
+            if is_async:
+                (phist, cshist), state, cstate = carry
+                cohort_t, idx_t, stale_t, t = xs
+                params = jax.tree.map(lambda h: h[0], phist)
+                has_cs = len(jax.tree.leaves(cshist)) > 0
+            else:
+                params, state, cstate = carry
+                cohort_t, idx_t, t = xs
             key_t = jax.random.fold_in(session_key, t)
+
+            def _push_carry(params, state, cstate):
+                # async ring update: the new snapshot enters at slot 0,
+                # the oldest falls off the end (K+1 snapshots live)
+                if not is_async:
+                    return RoundCarry(params, state, cstate), None
+
+                def push(h, v):
+                    return jnp.concatenate([v[None], h[:-1]], axis=0)
+
+                nph = jax.tree.map(lambda h, p: push(h, p), phist, params)
+                ncs = jax.tree.map(lambda h, c: push(h, c), cshist,
+                                   algorithm.client_state(state))
+                return ((nph, ncs), state, cstate), None
+
             # cohort-wide round weights, computed identically on every
             # device (cohort_t and weights are replicated): gather the
             # cohort's population weights — sentinel pads (id = I) clamp
@@ -387,8 +436,24 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
             live_full = cohort_t < num_clients
             w_c = jnp.where(live_full, weights[cohort_t], 0.0)
             rw_full = aggregation.cohort_weights(w_c, combine, num_clients)
+            tau_full = alive_full = alive_i32 = None
+            if is_async:
+                # delays past the ring bound are dropouts: discount 0
+                # (the reweight renormalizes over survivors) plus mask
+                # cancellation in the combine; within the bound the
+                # schedule's d(τ) applies.  Trace pads (sentinel slots)
+                # arrive as 0 — alive, zero-weighted.
+                alive_full = stale_t <= k_max
+                tau_full = jnp.minimum(stale_t, k_max)
+                disc = jnp.where(alive_full,
+                                 staleness.discount(tau_full),
+                                 jnp.float32(0.0))
+                rw_full = staleness_mod.discount_reweight(rw_full, disc)
+                alive_i32 = alive_full.astype(jnp.int32)
             offset = 0
             rw, cids, live = rw_full, cohort_t, live_full
+            tau, alive_loc = tau_full, alive_full
+            alive_rows = None
             if hier is not None:
                 # 2-D (groups, clients) mesh: the replicated flat cohort
                 # row is blocked (G, M_pad); this device owns the
@@ -406,6 +471,13 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
 
                 rw, cids, live = (_tile(rw_full), _tile(cohort_t),
                                   _tile(live_full))
+                if is_async:
+                    tau, alive_loc = _tile(tau_full), _tile(alive_full)
+                    # the inner combine of each local group cancels masks
+                    # over the group's full member row (global positions)
+                    alive_rows = jax.lax.dynamic_slice(
+                        alive_i32.reshape(g_tot, m_pad), (g_off, 0),
+                        (g_loc, m_pad))
                 idx_t = idx_t.reshape((g_loc * m_loc,) + idx_t.shape[2:])
             s_loc = idx_t.shape[0]
             if shard is not None:
@@ -413,6 +485,11 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                 rw = jax.lax.dynamic_slice(rw_full, (offset,), (s_loc,))
                 cids = jax.lax.dynamic_slice(cohort_t, (offset,), (s_loc,))
                 live = jax.lax.dynamic_slice(live_full, (offset,), (s_loc,))
+                if is_async:
+                    tau = jax.lax.dynamic_slice(tau_full, (offset,),
+                                                (s_loc,))
+                    alive_loc = jax.lax.dynamic_slice(alive_full,
+                                                      (offset,), (s_loc,))
 
             def _combine(msgs, key):
                 # the one aggregation entry point of every message path:
@@ -436,39 +513,114 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                             reduce_members=lambda p: jax.lax.psum(
                                 p, hier[1]),
                             reduce_groups=lambda p: jax.lax.psum(
-                                p, hier[0])))
+                                p, hier[0]),
+                            alive=alive_rows))
+                if not is_async:
+                    # the sync programs stay byte-identical: no alive
+                    # keyword ever reaches a strategy
+                    if shard is None:
+                        return aggregation.combine_messages(msgs, key)
+                    return aggregation.finalize_combine(
+                        jax.lax.psum(aggregation.partial_combine(
+                            msgs, key, offset, cohort_t.shape[0]), shard))
                 if shard is None:
-                    return aggregation.combine_messages(msgs, key)
+                    return aggregation.combine_messages(msgs, key,
+                                                        alive=alive_i32)
                 return aggregation.finalize_combine(
                     jax.lax.psum(aggregation.partial_combine(
-                        msgs, key, offset, cohort_t.shape[0]), shard))
+                        msgs, key, offset, cohort_t.shape[0],
+                        alive=alive_i32), shard))
 
             if not compressed and combine == "sum" \
                     and not aggregation.needs_messages:
                 # linear fast path: one upload on the weighted super-batch
                 flat = idx_t.reshape(-1)                     # (S·B,)
                 n_per = idx_t.shape[-1]
-                batch = (x_train[flat], y_train[flat],
-                         jnp.repeat(rw, n_per))
-                agg = algorithm.client_upload(params, state, batch)
+                if is_async:
+                    # bucketed super-batch: one gradient per ring slot,
+                    # the slot's super-batch weights masked to the
+                    # members at that delay.  Zero-weight buckets yield
+                    # exact-zero gradients (the weight scales every
+                    # per-sample cotangent), so an all-zero trace — all
+                    # mass in bucket 0, evaluated at phist[0] == params —
+                    # reproduces the sync aggregate bitwise.
+                    bucket_w = jnp.where(
+                        tau[None, :] == jnp.arange(k_max + 1)[:, None],
+                        rw[None, :], 0.0)                    # (K+1, S)
+                    wrep = jnp.repeat(bucket_w, n_per, axis=1)
+                    bx, by = x_train[flat], y_train[flat]
+                    # unrolled over the (small, static) ring: slot k's
+                    # gradient is the *same program* as the sync upload,
+                    # so bucket 0 at phist[0] matches it bit-for-bit
+                    agg = algorithm.client_upload(
+                        jax.tree.map(lambda h: h[0], phist), state,
+                        (bx, by, wrep[0]))
+                    for k in range(1, k_max + 1):
+                        g_k = algorithm.client_upload(
+                            jax.tree.map(lambda h, _k=k: h[_k], phist),
+                            state, (bx, by, wrep[k]))
+                        agg = jax.tree.map(lambda a, g: a + g, agg, g_k)
+                else:
+                    batch = (x_train[flat], y_train[flat],
+                             jnp.repeat(rw, n_per))
+                    agg = algorithm.client_upload(params, state, batch)
                 if shard is not None:
                     agg = jax.lax.psum(agg, shard)
                 params, state = algorithm.server_step(params, state, agg)
-                return RoundCarry(params, state, cstate), None
+                return _push_carry(params, state, cstate)
+
+            pslots = None
+            if is_async:
+                # per-slot *elementwise* upload bases (delta/reassembly
+                # anchors): a (S_loc, …) row gather per leaf — gathers
+                # and elementwise ops are bit-deterministic, so slot-0
+                # rows reproduce the sync broadcast exactly
+                pslots = jax.tree.map(lambda h: h[tau], phist)
+
+            def _ring_select(fn_k):
+                # The upload *computation* is matmul-heavy and its bits
+                # can depend on how the batch dimension is carved up —
+                # a vmap over stacked ring params need not match the
+                # sync broadcast vmap bit-for-bit.  So evaluate the
+                # broadcast program once per ring slot (slot 0 IS the
+                # sync program) and select each cohort row at its delay:
+                # an all-zero trace takes every ``where`` else-branch
+                # and the sync output rides through untouched.
+                out = fn_k(0)
+                for k in range(1, k_max + 1):
+                    sel = tau == k
+                    out_k = fn_k(k)
+                    out = jax.tree.map(
+                        lambda o, ok, _s=sel: jnp.where(
+                            _s.reshape((-1,) + (1,) * (o.ndim - 1)),
+                            ok, o),
+                        out, out_k)
+                return out
+
+            def _vmap_upload(batch):
+                def at_slot(k):
+                    p_k = jax.tree.map(lambda h, _k=k: h[_k], phist)
+                    s_k = jax.tree.map(lambda h, _k=k: h[_k], cshist) \
+                        if has_cs else state
+                    return jax.vmap(algorithm.client_upload,
+                                    in_axes=(None, None, 0))(p_k, s_k,
+                                                             batch)
+                if not is_async:
+                    return jax.vmap(algorithm.client_upload,
+                                    in_axes=(None, None, 0))(params, state,
+                                                             batch)
+                return _ring_select(at_slot)
 
             if combine == "sum":
                 xb, yb = x_train[idx_t], y_train[idx_t]      # (S, B, ·)
                 ws = jnp.broadcast_to(rw[:, None], idx_t.shape)
-                raw = jax.vmap(algorithm.client_upload,
-                               in_axes=(None, None, 0))(params, state,
-                                                        (xb, yb, ws))
+                raw = _vmap_upload((xb, yb, ws))
             else:                                            # mean: models
                 batch = (x_train[idx_t], y_train[idx_t])     # (S, E, B, ·)
-                models = jax.vmap(algorithm.client_upload,
-                                  in_axes=(None, None, 0))(params, state,
-                                                           batch)
+                models = _vmap_upload(batch)
                 raw = models if not compressed else \
-                    jax.tree.map(lambda m, p: m - p, models, params)
+                    jax.tree.map(lambda m, p: m - p, models,
+                                 pslots if is_async else params)
 
             if compressed:
                 # gather the cohort's residuals from the (I, …) arena;
@@ -482,10 +634,28 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
 
                 # sentinel-padded slots (mesh padding) must contribute
                 # nothing: their messages are forced to zero here, and
-                # their residual rows are dropped by the scatter below
+                # their residual rows are dropped by the scatter below.
+                # In async mode dropped slots (τ > K) gate identically —
+                # their upload never arrived, whatever the strategy does
+                # with its own alive mask.
+                live_eff = live if not is_async \
+                    else jnp.logical_and(live, alive_loc)
+
                 def _gate(c):
-                    m = live.reshape((-1,) + (1,) * (c.ndim - 1))
+                    m = live_eff.reshape((-1,) + (1,) * (c.ndim - 1))
                     return jnp.where(m, c, jnp.zeros_like(c))
+
+                def _keep_dropped(new_resid):
+                    # a dropped slot's upload never left the client, so
+                    # nothing was applied: its error-feedback residual
+                    # rides through the round unchanged
+                    if not is_async:
+                        return new_resid
+                    return jax.tree.map(
+                        lambda nr, od: jnp.where(
+                            alive_loc.reshape(
+                                (-1,) + (1,) * (nr.ndim - 1)), nr, od),
+                        new_resid, resid)
 
                 def _scatter_resid(cstate, new_resid):
                     if hier is not None:
@@ -561,25 +731,45 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                     new_resid = jax.vmap(
                         lambda m, v: compressor.update_residual(
                             m, support, v))(inp, vals)
-                    cstate = _scatter_resid(cstate, new_resid)
+                    cstate = _scatter_resid(cstate, _keep_dropped(new_resid))
+                    if is_async and combine == "mean":
+                        # the slots' λ'-weighted deltas were taken
+                        # against *their own* ring snapshots; the base
+                        # the reassembled update applies to is therefore
+                        # ω^t + Σ_i λ'_i (ω^{t−τ_i} − ω^t), computed
+                        # from replicated full-cohort quantities so
+                        # every device agrees.  The shift is an exact
+                        # zero on an all-zero trace, and the ``where``
+                        # keeps even the −0.0 + x edge bit-identical to
+                        # the sync ``params + dec`` expression.
+                        pfull = jax.tree.map(lambda h: h[tau_full], phist)
+
+                        def _base_shift(p, pf):
+                            w = rw_full.reshape((-1,) + (1,) * p.ndim)
+                            return jnp.sum(w * (pf - p[None]), axis=0)
+
+                        shift = jax.tree.map(_base_shift, params, pfull)
+                        dec = jax.tree.map(
+                            lambda s, d: jnp.where(s == 0, d, s + d),
+                            shift, dec)
                     agg = dec if combine == "sum" else jax.tree.map(
                         lambda p, d: p + d, params, dec)
                     params, state = algorithm.server_step(params, state,
                                                           agg)
-                    return RoundCarry(params, state, cstate), None
+                    return _push_carry(params, state, cstate)
 
                 comp, new_resid = jax.vmap(
                     lambda m, r, c: compressor.compress(m, r, k0, k1, c)
                 )(raw, resid, cids.astype(jnp.uint32))
                 comp = jax.tree.map(_gate, comp)
-                cstate = _scatter_resid(cstate, new_resid)
+                cstate = _scatter_resid(cstate, _keep_dropped(new_resid))
                 if combine == "sum":
                     msgs = comp                              # λ' in ws
                 else:
                     msgs = jax.tree.map(
                         lambda d, p: rw.reshape(
                             (-1,) + (1,) * (d.ndim - 1)) * (p + d),
-                        comp, params)
+                        comp, pslots if is_async else params)
             elif combine == "sum":
                 msgs = raw                                   # λ' in ws
             else:
@@ -589,15 +779,25 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
 
             agg = _combine(msgs, key_t)
             params, state = algorithm.server_step(params, state, agg)
-            return RoundCarry(params, state, cstate), None
+            return _push_carry(params, state, cstate)
 
+        if is_async:
+            # the carry's params slot is the snapshot ring (phist,
+            # cshist); run() passes it in and reads params back out of
+            # ring slot 0 at the chunk boundary
+            carry, _ = jax.lax.scan(
+                one_round, (params, state, cstate),
+                (cohort_chunk, idx_chunk, stale_chunk, ts))
+            return carry
         carry, _ = jax.lax.scan(one_round,
                                 RoundCarry(params, state, cstate),
                                 (cohort_chunk, idx_chunk, ts))
         return carry.params, carry.state, carry.cstate
 
+    donate = (0, 1, 2, 7, 8, 9) if is_async else (0, 1, 2, 7, 8)
+    n_tail = 2 if is_async else 1      # [stale_chunk,] ts
     if mesh is None:
-        return jax.jit(chunk, donate_argnums=(0, 1, 2, 7, 8))
+        return jax.jit(chunk, donate_argnums=donate)
 
     spec = jax.sharding.PartitionSpec
     if tuple(mesh.axis_names) == ("groups", "clients"):
@@ -608,35 +808,37 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
         hier_axes = mesh.axis_names
 
         def hier_body(params, state, cstate, x_train, y_train, weights,
-                      key_data, cohort_chunk, idx_chunk, ts):
+                      key_data, cohort_chunk, idx_chunk, *rest):
             return chunk(params, state, cstate, x_train, y_train,
-                         weights, key_data, cohort_chunk, idx_chunk, ts,
-                         hier=hier_axes)
+                         weights, key_data, cohort_chunk, idx_chunk,
+                         *rest, hier=hier_axes)
 
         fn = mesh_mod.shard_map_fn(
             hier_body, mesh,
-            in_specs=(spec(),) * 8 + (spec(None, "groups", "clients"),
-                                      spec()),
+            in_specs=(spec(),) * 8 + (spec(None, "groups", "clients"),)
+            + (spec(),) * n_tail,
             out_specs=(spec(), spec(), spec()))
-        return jax.jit(fn, donate_argnums=(0, 1, 2, 7, 8))
+        return jax.jit(fn, donate_argnums=donate)
 
     axis = mesh.axis_names[0]
 
     def sharded_body(params, state, cstate, x_train, y_train, weights,
-                     key_data, cohort_chunk, idx_chunk, ts):
+                     key_data, cohort_chunk, idx_chunk, *rest):
         return chunk(params, state, cstate, x_train, y_train, weights,
-                     key_data, cohort_chunk, idx_chunk, ts, shard=axis)
+                     key_data, cohort_chunk, idx_chunk, *rest, shard=axis)
 
     # the cohort axis of idx_chunk is sharded; cohort ids, population
-    # weights and the residual arena are replicated (the arena's rows
-    # belong to arbitrary clients, not to a device — the cohort-sized
-    # all_gather above keeps the copies identical)
+    # weights, the staleness-trace rows and the residual arena are
+    # replicated (the arena's rows belong to arbitrary clients, not to a
+    # device — the cohort-sized all_gather above keeps the copies
+    # identical)
     fn = mesh_mod.shard_map_fn(
         sharded_body, mesh,
         in_specs=(spec(), spec(), spec(), spec(), spec(), spec(),
-                  spec(), spec(), spec(None, axis), spec()),
+                  spec(), spec(), spec(None, axis))
+        + (spec(),) * n_tail,
         out_specs=(spec(), spec(), spec()))
-    return jax.jit(fn, donate_argnums=(0, 1, 2, 7, 8))
+    return jax.jit(fn, donate_argnums=donate)
 
 
 def _block_schedule(cohorts, schedule, g: int, m: int, m_pad: int,
@@ -687,7 +889,8 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
         batch_size: int, rounds: int, params: Optional[PyTree] = None,
         seed: int = 0, eval_every: int = 1, eval_samples: int = 10000,
         aggregation: Optional[Aggregation] = None,
-        compressor=None, mesh=None) -> tuple[PyTree, History]:
+        compressor=None, mesh=None, staleness=None,
+        staleness_trace=None) -> tuple[PyTree, History]:
     """Run ``algorithm`` on ``task`` for ``rounds`` rounds.
 
     ``task`` — a :class:`repro.fed.tasks.base.FedTask`; it supplies the
@@ -714,6 +917,17 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
     aggregation; cohorts are sentinel-padded to a device multiple when
     needed, so any population size I and cohort size S run on any device
     count.  ``None`` runs single-device.
+
+    ``staleness`` — a :class:`repro.fed.staleness.StalenessConfig` turns
+    on the async round mode: a seed-stable staleness trace (drawn on its
+    own rng stream by :func:`repro.data.partition.sample_staleness`, or
+    supplied explicitly as ``staleness_trace``, a (rounds, cohort)
+    integer array) assigns every (round, cohort-slot) a delay τ; slots
+    upload against the params of round t−τ from a ring buffer of the
+    last K+1 snapshots, stale uploads are discounted per the config's
+    schedule, and delays past K become dropouts (weight 0, secure pair
+    masks cancelled, recovery bytes charged to ``History.comm["async"]``).
+    An all-zero trace is bit-identical to ``staleness=None``.
     """
     aggregation = aggregation if aggregation is not None \
         else PlainAggregation()
@@ -740,6 +954,26 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
                                        algorithm.local_steps, seed,
                                        e_axis=algorithm.combine == "mean",
                                        cohort_size=cohort, groups=groups)
+    if staleness_trace is not None and staleness is None:
+        raise ValueError(
+            "staleness_trace requires the async round mode: pass a "
+            "repro.fed.staleness.StalenessConfig as staleness=")
+    trace = None
+    if staleness is not None:
+        if staleness_trace is None:
+            trace = sample_staleness(cohort,
+                                     np.arange(1, rounds + 1,
+                                               dtype=np.int64),
+                                     seed, staleness.delay_probs)
+        else:
+            trace = np.asarray(staleness_trace, np.int64)
+            if trace.shape != (rounds, cohort):
+                raise ValueError(
+                    f"staleness_trace shape {trace.shape} != (rounds, "
+                    f"cohort) = {(rounds, cohort)}")
+            if (trace < 0).any():
+                raise ValueError("staleness_trace delays must be >= 0")
+    trace_pad = trace
     if mesh is not None:
         axes = tuple(mesh.axis_names)
         if groups is not None:
@@ -760,6 +994,12 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
             m_pad = -(-m // dc) * dc
             cohorts, schedule = _block_schedule(cohorts, schedule, g, m,
                                                 m_pad, part.num_clients)
+            if trace_pad is not None:
+                # pad slots get delay 0: alive, zero-weighted — the
+                # same convention the single-device hier path applies
+                trace_pad, _ = _block_schedule(trace_pad,
+                                               trace_pad[..., None],
+                                               g, m, m_pad, 0)
         elif axes == ("groups", "clients"):
             raise ValueError(
                 "a (groups, clients) mesh needs a "
@@ -778,6 +1018,9 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
                     1)
                 widths = [(0, 0), (0, pad)] + [(0, 0)] * (schedule.ndim - 2)
                 schedule = np.pad(schedule, widths)
+                if trace_pad is not None:
+                    trace_pad = np.concatenate(
+                        [trace_pad, np.zeros((rounds, pad), np.int64)], 1)
     cohort_dev = jnp.asarray(cohorts, jnp.int32)             # one transfer
     idx_dev = jnp.asarray(schedule, jnp.int32)               # one transfer
     x_train = _staged(data.x_train)
@@ -785,12 +1028,26 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
     weights = jnp.asarray(algorithm.client_weights(part, batch_size),
                           jnp.float32)
     key_data = jax.random.key_data(jax.random.key(seed + 10_000))
-    run_chunk = _chunk_fn(algorithm, aggregation, compressor, mesh)
+    stale_dev = None if trace_pad is None \
+        else jnp.asarray(trace_pad, jnp.int32)
+    run_chunk = _chunk_fn(algorithm, aggregation, compressor, mesh,
+                          staleness)
 
     # chunk inputs are donated — never hand the caller's param buffers to
     # the donating executable (the caller may reuse them across runs)
     params = jax.tree.map(jnp.array, params)
     state = algorithm.init_state(params)
+    ring = None
+    if staleness is not None:
+        # snapshot ring, newest first: slot 0 holds the current params;
+        # rounds earlier than the run see the init point, so a delayed
+        # slot in round 1 replays against the initial params
+        depth = staleness.max_staleness + 1
+        ring = (jax.tree.map(lambda p: jnp.repeat(p[None], depth, axis=0),
+                             params),
+                jax.tree.map(lambda c: jnp.repeat(jnp.asarray(c)[None],
+                                                  depth, axis=0),
+                             algorithm.client_state(state)))
     cstate: PyTree = ()
     if compressor is not None:
         cstate = compressor.init_client_state(
@@ -802,6 +1059,22 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
     hist = History(uplink_bytes_per_round=ledger.uplink_total,
                    downlink_bytes_per_round=ledger.downlink_total,
                    comm=ledger.as_dict())
+    if staleness is not None:
+        # async accounting: stats over the *real* cohort slots (trace
+        # pre-padding) plus the exact seed-share recovery wire charged
+        # per dropped slot by the strategy
+        k = staleness.max_staleness
+        dropped = staleness_mod.dropped_per_round(trace, k)
+        rec_fn = getattr(aggregation, "recovery_bytes_per_drop", None)
+        rec_per = int(rec_fn(part.num_clients)) if rec_fn else 0
+        hist.comm["async"] = {
+            "max_staleness": k,
+            "stale_fraction": float((trace > 0).mean()),
+            "dropped_total": int(dropped.sum()),
+            "dropout_rate": float(dropped.sum() / trace.size),
+            "recovery_bytes_per_drop": rec_per,
+            "recovery_bytes_total": int(dropped.sum()) * rec_per,
+        }
     t0 = time.time()
     done = 0
     while done < rounds:
@@ -817,10 +1090,17 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
                 "ignore",
                 message=r"Some donated buffers were not usable: "
                         r"ShapedArray\(int32")
-            params, state, cstate = run_chunk(
-                params, state, cstate, x_train, y_train, weights,
-                key_data, cohort_dev[done:done + n],
-                idx_dev[done:done + n], ts)
+            if staleness is None:
+                params, state, cstate = run_chunk(
+                    params, state, cstate, x_train, y_train, weights,
+                    key_data, cohort_dev[done:done + n],
+                    idx_dev[done:done + n], ts)
+            else:
+                ring, state, cstate = run_chunk(
+                    ring, state, cstate, x_train, y_train, weights,
+                    key_data, cohort_dev[done:done + n],
+                    idx_dev[done:done + n], stale_dev[done:done + n], ts)
+                params = jax.tree.map(lambda h: h[0], ring[0])
         done += n
         metrics = algorithm.round_metrics(state)
         record(hist, done, measure, params,

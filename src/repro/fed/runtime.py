@@ -74,7 +74,8 @@ def run(task: FedTask, algorithm: protocol.FedAlgorithm, data,
         part: Partition, *, batch_size: int, rounds: int, params=None,
         seed: int = 0, eval_every: int = 1, eval_samples: int = 10000,
         aggregation: Optional[agg_mod.Aggregation] = None,
-        compressor=None, mesh=None) -> tuple:
+        compressor=None, mesh=None, staleness=None,
+        staleness_trace=None) -> tuple:
     """The generic task × algorithm entry all four wrappers reduce to.
 
     ``params=None`` initializes from ``task.init_params(key(seed))``
@@ -84,7 +85,9 @@ def run(task: FedTask, algorithm: protocol.FedAlgorithm, data,
                       batch_size=batch_size, rounds=rounds, params=params,
                       seed=seed, eval_every=eval_every,
                       eval_samples=eval_samples, aggregation=aggregation,
-                      compressor=compressor, mesh=mesh)
+                      compressor=compressor, mesh=mesh,
+                      staleness=staleness,
+                      staleness_trace=staleness_trace)
 
 
 def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
@@ -94,7 +97,8 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
              eval_samples: int = 10000, secure: bool = False,
              fused: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
-             compressor=None, mesh=None) -> tuple:
+             compressor=None, mesh=None, staleness=None,
+             staleness_trace=None) -> tuple:
     """Algorithm 1 on the eq.-(11) objective F(ω) + λ‖ω‖².
 
     ``secure=True`` is shorthand for ``aggregation=aggregation.secure()``
@@ -111,7 +115,8 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
     return run(task, alg, data, part, batch_size=batch_size, rounds=rounds,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
-               compressor=compressor, mesh=mesh)
+               compressor=compressor, mesh=mesh, staleness=staleness,
+               staleness_trace=staleness_trace)
 
 
 def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
@@ -120,7 +125,8 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
              hidden: int = 128, eval_every: int = 1,
              eval_samples: int = 10000, secure: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
-             compressor=None, mesh=None) -> tuple:
+             compressor=None, mesh=None, staleness=None,
+             staleness_trace=None) -> tuple:
     """Algorithm 2 on eq. (18): min ‖ω‖² s.t. F(ω) ≤ U.
 
     ``secure=True`` masks the (value, gradient) upload q1 — the secure
@@ -135,7 +141,8 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
     return run(task, alg, data, part, batch_size=batch_size, rounds=rounds,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
-               compressor=compressor, mesh=mesh)
+               compressor=compressor, mesh=mesh, staleness=staleness,
+               staleness_trace=staleness_trace)
 
 
 def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
@@ -144,7 +151,8 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
                hidden: int = 128, eval_every: int = 1,
                eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
-               compressor=None, mesh=None) -> tuple:
+               compressor=None, mesh=None, staleness=None,
+               staleness_trace=None) -> tuple:
     """E = 1 SGD baseline [3],[4] on the same objective as Algorithm 1."""
     task = _resolve_task(task, data, hidden)
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha))
@@ -152,7 +160,8 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
     return run(task, alg, data, part, batch_size=batch_size, rounds=rounds,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
-               compressor=compressor, mesh=mesh)
+               compressor=compressor, mesh=mesh, staleness=staleness,
+               staleness_trace=staleness_trace)
 
 
 def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
@@ -162,7 +171,8 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
                hidden: int = 128, eval_every: int = 1,
                eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
-               compressor=None, mesh=None) -> tuple:
+               compressor=None, mesh=None, staleness=None,
+               staleness_trace=None) -> tuple:
     """FedAvg [3] / PR-SGD [5]: E local steps per round, then model average.
 
     Per-client batches are (I, E, B) samples; aggregation weight N_i/N.
@@ -178,4 +188,5 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
     return run(task, alg, data, part, batch_size=batch_size, rounds=rounds,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
-               compressor=compressor, mesh=mesh)
+               compressor=compressor, mesh=mesh, staleness=staleness,
+               staleness_trace=staleness_trace)

@@ -1,0 +1,204 @@
+"""Bounded-staleness round simulation: delay traces, discount schedules,
+and the async accounting model.
+
+The synchronous engine is a barrier per round: every cohort slot uploads
+against the *current* params and a straggler stalls everyone.  Real
+fleets don't wait.  The async round mode keeps the engine a
+deterministic `lax.scan` — rounds still advance one server update at a
+time — but gives every cohort slot an integer **delay** τ drawn into a
+seed-stable staleness trace (:func:`repro.data.partition.
+sample_staleness`, its own rng stream): slot i of round t computed its
+upload against the params of round t−τ_i, gathered from a bounded ring
+buffer of the last K+1 param snapshots carried through the scan.  This
+is the standard bounded-staleness model; the SSCA surrogate recursion is
+a τ-averaged convex combination (arXiv 1801.08266), so a stale gradient
+perturbs the surrogate by an amount the ρ-schedule already contracts —
+bounded delay keeps the convergence argument intact.
+
+Three pieces live here:
+
+* **Discount schedules** — how much a stale upload counts.  The server
+  multiplies slot i's round weight by d(τ_i) and renormalizes so the
+  cohort aggregate keeps its scale (:func:`discount_reweight` preserves
+  Σλ' exactly — the estimate stays normalized, and an all-fresh round is
+  *bit-identical* to the synchronous engine: d ≡ 1 inserts only exact
+  ``·1.0`` multiplies).
+* **Dropout semantics** — delays past the bound (τ > K) mean the upload
+  never arrived inside the round's window: the slot is **dropped**, its
+  weight forced to 0, and — under secure aggregation — its pair masks
+  are cancelled by Bonawitz seed-share recovery
+  (:mod:`repro.kernels.secure_agg`'s ``alive`` path, bit-identical to
+  the plain survivor sum) with the recovery wire charged to the ledger.
+* **The wall-clock model** — the bench's accuracy-vs-time axis.  Unit
+  time is one no-straggler round.  A synchronous round waits for its
+  slowest member (1 + max τ, the barrier cost); an async round always
+  takes unit time (stale uploads just arrive late and discounted);
+  drop-stragglers takes unit time but discards every delayed upload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PolynomialDiscount:
+    """d(τ) = (1 + τ)^(−a) — the standard polynomial staleness discount
+    (a=0.5 is the classic async-SGD choice).  a=0 counts stale uploads
+    fully; larger a trusts them less.  d(0) = 1 exactly, so fresh
+    uploads are never perturbed."""
+    a: float = 0.5
+
+    def __post_init__(self):
+        if not (isinstance(self.a, (int, float))
+                and not isinstance(self.a, bool)) or self.a < 0:
+            raise ValueError(f"a={self.a!r} must be a nonnegative number")
+
+    def discount(self, tau):
+        tau = jnp.asarray(tau)
+        if self.a == 0:
+            return jnp.ones(tau.shape, jnp.float32)
+        return (1.0 + tau.astype(jnp.float32)) ** jnp.float32(-self.a)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantDiscount:
+    """d(τ) ≡ 1 — bounded staleness with no down-weighting (pure
+    delay-tolerance; dropouts still apply past the bound)."""
+
+    def discount(self, tau):
+        return jnp.ones(jnp.asarray(tau).shape, jnp.float32)
+
+
+Schedule = Union[PolynomialDiscount, ConstantDiscount]
+
+
+def _freeze_probs(p) -> Optional[Tuple]:
+    if p is None:
+        return None
+    arr = np.asarray(p, np.float64)
+    if arr.ndim == 1:
+        return tuple(float(x) for x in arr)
+    if arr.ndim == 2:
+        return tuple(tuple(float(x) for x in row) for row in arr)
+    raise ValueError(f"delay_probs must be 1-D or 2-D, got {arr.ndim}-D")
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessConfig:
+    """The async round mode's knob set — frozen and hashable, because it
+    is part of the engine's compiled-chunk cache key.
+
+    ``max_staleness`` — K, the ring-buffer bound: the scan carries the
+    last K+1 param snapshots and a slot may be up to K rounds stale.
+    Delays τ > K are dropouts.  K = 0 keeps only the current params
+    (any delayed slot drops).
+
+    ``schedule`` — the discount d(τ) applied to stale uploads (default
+    polynomial a=0.5).
+
+    ``delay_probs`` — the default trace distribution handed to
+    :func:`repro.data.partition.sample_staleness` when the caller does
+    not pass an explicit trace; ``None`` draws the all-zero (fully
+    synchronous) trace.  Stored as nested tuples so the config stays
+    hashable.
+    """
+    max_staleness: int = 2
+    schedule: Schedule = PolynomialDiscount(0.5)
+    delay_probs: Optional[Tuple] = None
+
+    def __post_init__(self):
+        k = self.max_staleness
+        if isinstance(k, bool) or not isinstance(k, (int, np.integer)) \
+                or int(k) < 0:
+            raise ValueError(f"max_staleness={k!r} must be an int >= 0")
+        object.__setattr__(self, "max_staleness", int(k))
+        object.__setattr__(self, "delay_probs",
+                           _freeze_probs(self.delay_probs))
+
+    def discount(self, tau):
+        return self.schedule.discount(tau)
+
+
+def discount_reweight(weights, disc):
+    """Apply a per-slot discount to the cohort weights, mass-preserving.
+
+    λ'_i = λ_i · d_i · (Σλ / Σ(λ·d)) — the discounted weights are
+    rescaled so Σλ' = Σλ: the aggregate keeps the scale the algorithm's
+    server step expects (normalized/unbiased in the same sense as the
+    partial-participation reweighting), the discount only shifts mass
+    from stale slots to fresh ones.  Exactness properties the async
+    bit-identity tests rely on:
+
+    * d ≡ 1 → scale = Σλ/Σλ = 1.0 *exactly* (same dividend and divisor),
+      and λ·1.0·1.0 == λ bitwise — an all-fresh round is untouched.
+    * d_i = 0 (dropout) → slot i contributes nothing and the rescale
+      renormalizes over the survivors.
+    * all dropped (Σ(λ·d) = 0) → zero weights (the round is a no-op
+      aggregate; the server step still runs on a zero estimate).
+
+    Sentinel-padded slots arrive with λ = 0 and stay exact zeros.
+    """
+    weights = jnp.asarray(weights)
+    disc = jnp.asarray(disc, weights.dtype)
+    num = jnp.sum(weights)
+    den = jnp.sum(weights * disc)
+    scale = jnp.where(den != 0, num / jnp.where(den != 0, den, 1.0), 0.0)
+    return weights * disc * scale
+
+
+def round_times(trace, mode: str, max_staleness: int) -> np.ndarray:
+    """Simulated wall-clock cost of every round, in no-straggler round
+    units: (T,) f64 from a (T, S) trace.
+
+    * ``"sync"`` — the barrier waits for the slowest member: cost
+      1 + max_i min(τ_i, K+1).  (A slot past the bound would stall the
+      barrier forever; the sync server gives up at the same K+1 window
+      the async mode drops at, so the two modes see the same trace
+      horizon.)
+    * ``"async"`` — no barrier, unit cost: late uploads arrive in later
+      rounds, already accounted by their delay.
+    * ``"drop"`` — drop-stragglers: unit cost, every τ > 0 upload is
+      discarded (the accuracy cost shows up in the trajectory, not the
+      clock).
+    """
+    trace = np.asarray(trace)
+    if mode == "sync":
+        return 1.0 + np.minimum(trace, max_staleness + 1).max(axis=1) \
+            .astype(np.float64)
+    if mode in ("async", "drop"):
+        return np.ones(trace.shape[0], np.float64)
+    raise ValueError(f"mode={mode!r} not in ('sync', 'async', 'drop')")
+
+
+def dropped_per_round(trace, max_staleness: int) -> np.ndarray:
+    """(T,) count of dropped slots (τ > K) per round — the host-side
+    companion of the engine's in-scan alive mask, used for the exact
+    recovery-byte ledger charge."""
+    return (np.asarray(trace) > int(max_staleness)).sum(axis=1) \
+        .astype(np.int64)
+
+
+def diurnal_delay_probs(rounds: int, max_delay: int = 4,
+                        straggler_frac: float = 0.4,
+                        period: int = 20) -> np.ndarray:
+    """A (T, D) diurnal straggler distribution for benches and examples:
+    the straggler fraction swings sinusoidally over ``period`` rounds
+    (night: few stragglers; peak: ``straggler_frac`` of the cohort is
+    delayed, spread geometrically over 1…max_delay).  Row t is the delay
+    distribution of round t; feed to :func:`repro.data.partition.
+    sample_staleness`.
+    """
+    if max_delay < 1:
+        raise ValueError(f"max_delay={max_delay} must be >= 1")
+    t = np.arange(rounds, dtype=np.float64)
+    frac = straggler_frac * 0.5 * (1.0 - np.cos(2 * np.pi * t / period))
+    tail = 0.5 ** np.arange(max_delay, dtype=np.float64)     # geometric
+    tail = tail / tail.sum()
+    probs = np.empty((rounds, max_delay + 1), np.float64)
+    probs[:, 0] = 1.0 - frac
+    probs[:, 1:] = frac[:, None] * tail[None, :]
+    return probs

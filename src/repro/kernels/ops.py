@@ -77,7 +77,7 @@ def ssca_update(params: PyTree, lin: PyTree, grads: PyTree, beta: PyTree,
 
 def secure_quant_sum(wmsgs: PyTree, key_data, *, scale_bits: int,
                      client_offset=0, num_clients: Optional[int] = None,
-                     interpret: bool = False,
+                     alive=None, interpret: bool = False,
                      use_kernel: Optional[bool] = None) -> PyTree:
     """Streaming masked quantized aggregate over a message pytree.
 
@@ -91,8 +91,12 @@ def secure_quant_sum(wmsgs: PyTree, key_data, *, scale_bits: int,
     ``client_offset``/``num_clients`` give the shard's global client ids
     ([offset, offset + I_loc) of num_clients) for the sharded engine —
     psum the returned int32 pytree over the client axis, then
-    :func:`secure_dequantize`.  ``use_kernel=None`` auto-selects the
-    Pallas kernel on TPU and the XLA streaming path elsewhere (the
+    :func:`secure_dequantize`.  ``alive`` (optional (num_clients,) 0/1)
+    enables dropout recovery: dropped positions contribute nothing and
+    every survivor's mask stream against them is cancelled, so the
+    aggregate equals the plain survivor sum bit-for-bit (see
+    :mod:`repro.kernels.secure_agg`).  ``use_kernel=None`` auto-selects
+    the Pallas kernel on TPU and the XLA streaming path elsewhere (the
     kernel is also used under ``interpret=True`` for CPU validation).
     """
     leaves, treedef = jax.tree_util.tree_flatten(wmsgs)
@@ -113,19 +117,21 @@ def secure_quant_sum(wmsgs: PyTree, key_data, *, scale_bits: int,
         pad = (-n) % _sa.LANES
         if pad:
             flat = jnp.pad(flat, ((0, 0), (0, pad)))
-        scalars = jnp.concatenate(
-            [key_data,
-             jnp.asarray(client_offset).astype(jnp.uint32).reshape(1)])
+        scalars = [key_data,
+                   jnp.asarray(client_offset).astype(jnp.uint32).reshape(1)]
+        if alive is not None:
+            scalars.append(jnp.asarray(alive).astype(jnp.uint32).reshape(-1))
         agg = _sa.masked_sum_2d(
-            flat.reshape(i_loc, -1, _sa.LANES), scalars,
+            flat.reshape(i_loc, -1, _sa.LANES), jnp.concatenate(scalars),
             scale_bits=scale_bits, num_clients=nc,
+            with_alive=alive is not None,
             interpret=interpret).reshape(-1)[:n]
     elif isinstance(client_offset, int) and client_offset == 0 \
             and i_loc == nc:
-        agg = _sa.masked_sum_flat(flat, key_data, scale_bits)
+        agg = _sa.masked_sum_flat(flat, key_data, scale_bits, alive)
     else:
         agg = _sa.masked_partial_sum_flat(flat, key_data, scale_bits,
-                                          client_offset, nc)
+                                          client_offset, nc, alive)
     out, off = [], 0
     for size, shape in zip(sizes, shapes):
         out.append(agg[off:off + size].reshape(shape))

@@ -44,6 +44,20 @@ Masked uploads pass through ``optimization_barrier`` in the XLA paths:
 in the protocol they cross the client→server trust boundary, so the
 compiler must not algebraically cancel ±mask pairs (which would silently
 turn the benchmark into a plain quantized sum).
+
+**Dropout recovery** (Bonawitz seed-share recovery, the async engine's
+missing-upload case): every path takes an optional ``alive`` vector —
+0/1 over the *global* cohort positions.  A dropped slot d contributes no
+upload at all (``alive[d]`` zeroes its masked message), and every
+survivor's directed mask stream against d is cancelled
+(``alive[peer]`` zeroes the ±PRG(s_id) term).  In the real protocol the
+survivors' uploads *do* carry those masks and the server subtracts them
+after recovering d's pair seeds from the survivors' secret shares;
+because Z_{2^32} addition is exact, folding the cancellation into the
+per-slot mask sum is bit-identical to that two-step subtraction — the
+masked sum over survivors equals the plain survivor sum ``Σ_{alive} q_i``
+bit-for-bit.  ``alive=None`` keeps the exact pre-dropout program (no
+multiplies inserted).
 """
 from __future__ import annotations
 
@@ -138,7 +152,7 @@ def dequantize(q, scale_bits: int):
 # ---------------------------------------------------------------------------
 
 def _masked_partial_sum_scan(q, key0, key1, client_offset,
-                             num_clients: int):
+                             num_clients: int, alive=None):
     """Large-I directed formulation: lax.scan over the local clients
     (trace size independent of I), peer mask streams vectorized per
     client.  Bit-identical to the unrolled paths (mod-2^32 exactness);
@@ -157,8 +171,14 @@ def _masked_partial_sum_scan(q, key0, key1, client_offset,
         bits = mask_bits(seeds[:, None], counters[None, :])
         sgn = jnp.where(peers == i, 0,
                         jnp.where(i < peers, 1, -1)).astype(jnp.int32)
-        upload = jax.lax.optimization_barrier(
-            q_i + jnp.sum(sgn[:, None] * _i32(bits), axis=0))
+        if alive is not None:
+            # the server's post-hoc cancellation of dropped peers' masks,
+            # folded into the stream sign (exact in Z_2^32)
+            sgn = sgn * alive.astype(jnp.int32)
+        upload = q_i + jnp.sum(sgn[:, None] * _i32(bits), axis=0)
+        if alive is not None:
+            upload = upload * alive[i.astype(jnp.int32)]
+        upload = jax.lax.optimization_barrier(upload)
         return acc + upload, None
 
     out, _ = jax.lax.scan(one_client, jnp.zeros((n,), jnp.int32),
@@ -166,22 +186,25 @@ def _masked_partial_sum_scan(q, key0, key1, client_offset,
     return out
 
 
-def masked_sum_flat(msgs_flat, key_data, scale_bits: int):
+def masked_sum_flat(msgs_flat, key_data, scale_bits: int, alive=None):
     """Full-view streaming masked sum: (I, n) f32 → (n,) int32.
 
     One mask stream per pair (the server-side simulation may memoize the
     pair's shared stream — both endpoints expand the same seed), applied
     +into the lower client's upload and −into the higher's; uploads then
     cross the trust boundary (optimization_barrier) and are summed with
-    int32 wraparound.
+    int32 wraparound.  ``alive`` (optional (I,) 0/1) drops clients with
+    exact mask cancellation — see the module docstring.
     """
     i_cl, n = msgs_flat.shape
     q = quantize(msgs_flat, scale_bits)
+    if alive is not None:
+        alive = alive.astype(jnp.int32)
     if i_cl == 1:
-        return q[0]
+        return q[0] if alive is None else q[0] * alive[0]
     key0, key1 = key_data[0], key_data[1]
     if i_cl > UNROLL_MAX_CLIENTS:
-        return _masked_partial_sum_scan(q, key0, key1, 0, i_cl)
+        return _masked_partial_sum_scan(q, key0, key1, 0, i_cl, alive)
     counters = jnp.arange(n, dtype=jnp.uint32)
     # per-client accumulator chains (plain vector adds) instead of
     # scattered updates into one (I, n) buffer — the 2·P sequential
@@ -191,8 +214,15 @@ def masked_sum_flat(msgs_flat, key_data, scale_bits: int):
     for a, b in zip(lo, hi):
         m = _i32(mask_bits(pair_seed(key0, key1, jnp.uint32(a),
                                      jnp.uint32(b)), counters))
-        uploads[a] = uploads[a] + m
-        uploads[b] = uploads[b] - m
+        if alive is None:
+            uploads[a] = uploads[a] + m
+            uploads[b] = uploads[b] - m
+        else:
+            # each survivor's stream against a dropped peer is cancelled
+            uploads[a] = uploads[a] + alive[b] * m
+            uploads[b] = uploads[b] - alive[a] * m
+    if alive is not None:
+        uploads = [u * alive[i] for i, u in enumerate(uploads)]
     uploads = jax.lax.optimization_barrier(uploads)
     out = uploads[0]
     for u in uploads[1:]:
@@ -201,7 +231,7 @@ def masked_sum_flat(msgs_flat, key_data, scale_bits: int):
 
 
 def masked_ring_partial_sum(q, key0, key1, client_offset,
-                            num_clients: int):
+                            num_clients: int, alive=None):
     """Directed masked sum of already-quantized rows: (I_loc, n) int32 →
     (n,) int32.
 
@@ -215,11 +245,13 @@ def masked_ring_partial_sum(q, key0, key1, client_offset,
     every mask exactly (mod-2^32 associativity).
     """
     i_loc, n = q.shape
+    if alive is not None:
+        alive = alive.astype(jnp.int32)
     if num_clients == 1:
-        return q[0]
+        return q[0] if alive is None else q[0] * alive[0]
     if num_clients > UNROLL_MAX_CLIENTS:
         return _masked_partial_sum_scan(q, key0, key1, client_offset,
-                                        num_clients)
+                                        num_clients, alive)
     counters = jnp.arange(n, dtype=jnp.uint32)
     uploads = []
     for li in range(i_loc):
@@ -231,8 +263,13 @@ def masked_ring_partial_sum(q, key0, key1, client_offset,
                                          jnp.maximum(i, ju)), counters))
             sgn = jnp.where(ju == i, 0,
                             jnp.where(i < ju, 1, -1)).astype(jnp.int32)
+            if alive is not None:
+                sgn = sgn * alive[j]
             tot = tot + sgn * m
-        uploads.append(q[li] + tot)
+        up = q[li] + tot
+        if alive is not None:
+            up = up * alive[i.astype(jnp.int32)]
+        uploads.append(up)
     uploads = jax.lax.optimization_barrier(uploads)
     out = uploads[0]
     for u in uploads[1:]:
@@ -241,7 +278,7 @@ def masked_ring_partial_sum(q, key0, key1, client_offset,
 
 
 def masked_partial_sum_flat(msgs_flat, key_data, scale_bits: int,
-                            client_offset, num_clients: int):
+                            client_offset, num_clients: int, alive=None):
     """Shard-local streaming masked sum: (I_loc, n) f32 → (n,) int32.
 
     The local clients are global ids [offset, offset + I_loc); each
@@ -254,14 +291,15 @@ def masked_partial_sum_flat(msgs_flat, key_data, scale_bits: int,
     """
     q = quantize(msgs_flat, scale_bits)
     return masked_ring_partial_sum(q, key_data[0], key_data[1],
-                                   client_offset, num_clients)
+                                   client_offset, num_clients, alive)
 
 
 # ---------------------------------------------------------------------------
 # Pallas kernel
 # ---------------------------------------------------------------------------
 
-def _make_kernel(i_loc: int, num_clients: int, scale_bits: int):
+def _make_kernel(i_loc: int, num_clients: int, scale_bits: int,
+                 with_alive: bool = False):
     scale = float(2.0 ** scale_bits)
 
     def kernel(msgs_ref, sc_ref, out_ref):
@@ -276,8 +314,8 @@ def _make_kernel(i_loc: int, num_clients: int, scale_bits: int):
         for li in range(i_loc):
             q = jnp.round(msgs_ref[li].astype(jnp.float32)
                           * scale).astype(jnp.int32)
+            i = offset + np.uint32(li)
             if num_clients > 1:
-                i = offset + np.uint32(li)
 
                 def peer(jj, tot):
                     j = jj.astype(jnp.uint32)
@@ -287,10 +325,16 @@ def _make_kernel(i_loc: int, num_clients: int, scale_bits: int):
                     sgn = jnp.where(j == i, 0,
                                     jnp.where(i < j, 1, -1)) \
                         .astype(jnp.int32)
+                    if with_alive:
+                        # alive bits ride behind the key words; dynamic
+                        # scalar load per peer (scalar-prefetch style)
+                        sgn = sgn * sc_ref[3 + jj].astype(jnp.int32)
                     return tot + sgn * _i32(bits)
 
                 q = q + jax.lax.fori_loop(0, num_clients, peer,
                                           jnp.zeros(shape, jnp.int32))
+            if with_alive:
+                q = q * sc_ref[3 + i.astype(jnp.int32)].astype(jnp.int32)
             acc = acc + q
         out_ref[...] = acc
 
@@ -298,23 +342,27 @@ def _make_kernel(i_loc: int, num_clients: int, scale_bits: int):
 
 
 @functools.partial(jax.jit, static_argnames=("scale_bits", "num_clients",
-                                             "interpret"))
+                                             "interpret", "with_alive"))
 def masked_sum_2d(msgs, scalars, *, scale_bits: int, num_clients: int,
-                  interpret: bool = False):
+                  interpret: bool = False, with_alive: bool = False):
     """The streaming kernel: (I_loc, R, 128) f32 messages → (R, 128) int32.
 
-    ``scalars``: (3,) uint32 — [key0, key1, client_offset].  Per grid
-    block the kernel quantizes the I_loc client rows, regenerates every
-    directed mask stream for the block's counter range in VMEM, applies
-    them with int32 wraparound, and accumulates the masked uploads —
-    masks never touch HBM.  Use :func:`repro.kernels.ops.secure_quant_sum`
-    for arbitrary message pytrees.
+    ``scalars``: (3,) uint32 — [key0, key1, client_offset] — or, with
+    ``with_alive=True``, (3 + num_clients,) uint32 with the 0/1 alive
+    bits of every global cohort position appended (dropout recovery: the
+    kernel cancels dropped peers' mask streams and zeroes dropped rows'
+    uploads, exactly as the XLA paths do).  Per grid block the kernel
+    quantizes the I_loc client rows, regenerates every directed mask
+    stream for the block's counter range in VMEM, applies them with
+    int32 wraparound, and accumulates the masked uploads — masks never
+    touch HBM.  Use :func:`repro.kernels.ops.secure_quant_sum` for
+    arbitrary message pytrees.
     """
     i_loc, rows, lanes = msgs.shape
     block = min(BLOCK_ROWS, rows)
     grid = (pl.cdiv(rows, block),)
     return pl.pallas_call(
-        _make_kernel(i_loc, num_clients, scale_bits),
+        _make_kernel(i_loc, num_clients, scale_bits, with_alive),
         grid=grid,
         in_specs=[pl.BlockSpec((i_loc, block, lanes), lambda i: (0, i, 0)),
                   pl.BlockSpec(memory_space=pl.ANY)],
