@@ -73,6 +73,20 @@ the count-sketch row to ``comm_curves`` — the secure column of
 dense words are incompressible by element coding); the sketch row is
 the one that actually shrinks the *secure* wire.
 
+Schema v8 adds the **memory section** (the home-sharded arena,
+:mod:`repro.fed.arena`): every ``configs`` row now carries
+``resident_bytes`` — peak live per-device bytes, sampled from
+``jax.live_arrays()`` shard sizes while the run executes — and the
+``memory`` section A/Bs ``arena="replicated"`` vs ``arena="sharded"``
+over populations up to I = 1M (I ∈ {10k, 100k} in smoke) at S ∈ {8,
+512} with top-k error feedback and async K = 4 rings, where the
+(I, model) EF arena dominates residency.  CI-gated headlines:
+``derived.resident_bytes_ratio`` ≤ 1/D + ε (the sharded arena actually
+shrinks per-device residency by the device count) and
+``derived.arena_round_time_ratio`` ≤ 1.1 (the collective cohort routing
+does not tax the round) — both modes are bit-identical in trajectory
+(``tests/sharded_arena_check.py``), so the residency drop is free.
+
     PYTHONPATH=src python benchmarks/bench_all.py [--smoke]
 
 Sharded configs run on virtual host devices
@@ -131,6 +145,45 @@ def main(argv=None):
                                             n_test=1000, seed=0)
     part = partition.iid(n_train, args.clients, seed=0)
     mesh = make_client_mesh(shards)
+
+    import gc
+    import threading
+    import time as time_mod
+
+    def sample_resident(fn, interval=0.02):
+        """Run ``fn()`` while a sampler thread sums live-array bytes per
+        device (``jax.live_arrays()`` → per-shard ``data.nbytes``);
+        return ``(fn(), peak_bytes_on_busiest_device)``.  The resident
+        state under measurement — weights, EF arena, snapshot ring — is
+        held as Python-level arrays across the engine's chunk loop, so
+        a 20 ms sampler sees it; transient XLA scratch inside a single
+        dispatch is invisible either way and identical across arenas."""
+        peak = [0]
+        stop = threading.Event()
+
+        def sampler():
+            while not stop.is_set():
+                per_dev = {}
+                for a in jax.live_arrays():
+                    try:
+                        for sh in a.addressable_shards:
+                            d = sh.device.id
+                            per_dev[d] = per_dev.get(d, 0) + sh.data.nbytes
+                    except Exception:       # deleted under our feet
+                        continue
+                if per_dev:
+                    peak[0] = max(peak[0], max(per_dev.values()))
+                time_mod.sleep(interval)
+
+        gc.collect()                        # drop prior configs' state
+        t = threading.Thread(target=sampler, daemon=True)
+        t.start()
+        try:
+            out = fn()
+        finally:
+            stop.set()
+            t.join()
+        return out, peak[0]
     aggs = [
         ("plain", None, True),
         ("secure", aggregation.secure(), True),
@@ -145,7 +198,12 @@ def main(argv=None):
                   eval_every=rounds, eval_samples=500, hidden=hidden,
                   seed=0, aggregation=agg, compressor=compressor,
                   mesh=mesh if use_mesh else None)
-        runtime.run_alg1(data, part, **kw)          # compile + stage
+        # compile + stage; the sampled rerun of the staged program is
+        # what the resident-bytes column measures (timing stays clean —
+        # the sampler thread never overlaps the timed runs)
+        runtime.run_alg1(data, part, **kw)
+        _, resident = sample_resident(
+            lambda: runtime.run_alg1(data, part, **kw))
         best, hist = None, None
         for _ in range(2):
             params, h = runtime.run_alg1(data, part, **kw)
@@ -153,7 +211,7 @@ def main(argv=None):
                 else min(best, h.wall_seconds)
             hist = h
         count = sum(int(np.prod(w.shape)) for w in jax.tree.leaves(params))
-        return best, hist, count
+        return best, hist, count, resident
 
     configs = []
     print("name,us_per_call,derived")
@@ -161,7 +219,7 @@ def main(argv=None):
         for aname, agg, shardable in aggs:
             for use_mesh in ([False, True] if shardable else [False]):
                 d = shards if use_mesh else 1
-                wall, h, count = timed_run(hidden, agg, use_mesh)
+                wall, h, count, resident = timed_run(hidden, agg, use_mesh)
                 final = float(h.train_cost[-1])
                 row = {"name": f"alg1/{aname}/shard{d}/{mname}",
                        "task": "mlp",
@@ -169,6 +227,7 @@ def main(argv=None):
                        "hidden": hidden, "param_count": count,
                        "rounds": rounds, "wall_s": round(wall, 4),
                        "round_ms": round(wall / rounds * 1e3, 4),
+                       "resident_bytes": resident,
                        "final_cost": round(final, 6),
                        "uplink_bytes_per_round": h.uplink_bytes_per_round,
                        "downlink_bytes_per_round":
@@ -468,6 +527,61 @@ def main(argv=None):
               f"{best / async_sync_rounds * 1e6:.1f},"
               f"drops={h.comm['async']['dropped_total']}")
 
+    # -- the memory section: replicated vs home-sharded arena residency.
+    # A tiny model over a large population makes the (I_pad, model) EF
+    # residual arena (and the async snapshot ring) the dominant resident
+    # allocation, so the per-device peak isolates what the home-device
+    # arena shards: sharded residency must land near 1/D of replicated
+    # while round time stays flat — the trajectories themselves are
+    # bit-identical (tests/sharded_arena_check.py), so the drop is free.
+    from repro.fed.staleness import StalenessConfig
+    mem_hidden = 8
+    mem_rounds = 4
+    mem_is = [10_000, 100_000] if args.smoke \
+        else [10_000, 100_000, 1_000_000]
+    mem_cohorts = [8] if args.smoke else [8, 512]
+    mem_variants = [("topk", compression.topk(0.1, bits=8), None),
+                    ("topk+async4", compression.topk(0.1, bits=8),
+                     StalenessConfig(max_staleness=4))]
+    if not args.smoke:
+        mem_variants.insert(0, ("plain", None, None))
+    mem_rows = []
+    for i_pop in mem_is:
+        mdata = synthetic.classification_dataset(n_train=i_pop, n_test=256,
+                                                 seed=0, k=16)
+        mpart = partition.iid(i_pop, i_pop, seed=0)
+        for s_coh in mem_cohorts:
+            for vname, comp, scfg in mem_variants:
+                for arena_mode in ("replicated", "sharded"):
+                    kw = dict(batch_size=4, rounds=mem_rounds,
+                              eval_every=mem_rounds // 2, eval_samples=256,
+                              hidden=mem_hidden, seed=0,
+                              aggregation=aggregation.sampled(s_coh),
+                              compressor=comp, staleness=scfg,
+                              mesh=mesh, arena=arena_mode)
+                    (_, h), resident = sample_resident(
+                        lambda: runtime.run_alg1(mdata, mpart, **kw))
+                    best = None
+                    for _ in range(3):
+                        _, h = runtime.run_alg1(mdata, mpart, **kw)
+                        best = h.wall_seconds if best is None \
+                            else min(best, h.wall_seconds)
+                    mem_rows.append({
+                        "name": f"alg1/mem/{vname}/I{i_pop}/S{s_coh}"
+                                f"/{arena_mode}",
+                        "variant": vname, "population": i_pop,
+                        "cohort": s_coh, "arena": arena_mode,
+                        "shards": shards, "hidden": mem_hidden,
+                        "max_staleness":
+                            None if scfg is None else scfg.max_staleness,
+                        "rounds": mem_rounds,
+                        "round_ms": round(best / mem_rounds * 1e3, 4),
+                        "resident_bytes": resident})
+                    print(f"bench_all/{mem_rows[-1]['name']},"
+                          f"{best / mem_rounds * 1e6:.1f},"
+                          f"resident_bytes={resident}")
+        del mdata, mpart
+
     def round_ms(name):
         return {c["name"]: c["round_ms"] for c in configs}[name]
 
@@ -556,6 +670,33 @@ def main(argv=None):
         "secure async round with dropout recovery <= 1.2x the clean " \
         "(zero-trace) secure async round"
 
+    # the home-sharded arena headlines: per-device peak residency and
+    # round-time tax of arena="sharded" over arena="replicated", gated
+    # at the largest-I top-k-EF sync row (where the (I, model) arena
+    # dominates residency and the contract is sharpest)
+    mem_by = {r["name"]: r for r in mem_rows}
+
+    def mem_pair(variant, i_pop, s_coh):
+        rep = mem_by[f"alg1/mem/{variant}/I{i_pop}/S{s_coh}/replicated"]
+        sh = mem_by[f"alg1/mem/{variant}/I{i_pop}/S{s_coh}/sharded"]
+        return rep, sh
+
+    gate_i = max(i for i in mem_is if i <= 100_000)
+    rep, sh = mem_pair("topk", gate_i, mem_cohorts[0])
+    derived["resident_bytes_ratio"] = round(
+        sh["resident_bytes"] / rep["resident_bytes"], 3)
+    derived["arena_round_time_ratio"] = round(
+        sh["round_ms"] / rep["round_ms"], 2)
+    derived["arena_resident_ratio_by_config"] = {
+        f"{v}/I{i}/S{s}": round(
+            mem_pair(v, i, s)[1]["resident_bytes"]
+            / mem_pair(v, i, s)[0]["resident_bytes"], 3)
+        for v, _, _ in mem_variants for i in mem_is for s in mem_cohorts}
+    derived["arena_target"] = \
+        f"sharded-arena peak per-device resident <= 1/{shards} + eps of " \
+        f"replicated at I={gate_i} with top-k EF, round time <= 1.1x " \
+        f"(trajectories bit-identical either way)"
+
     # the CPU mesh tax, per aggregation x model: round time on the
     # host-device mesh over single-device (shard_map on one physical
     # core adds dispatch overhead; on real multi-chip backends this
@@ -568,7 +709,7 @@ def main(argv=None):
         f"shard{shards}/shard1 round_ms on backend=" \
         f"{jax.default_backend()}; expected > 1 on CPU host devices"
 
-    out = {"schema": "bench_engine/v7",
+    out = {"schema": "bench_engine/v8",
            "jax": jax.__version__,
            "backend": jax.default_backend(),
            "host_devices": jax.device_count(),
@@ -589,6 +730,8 @@ def main(argv=None):
                                    int((async_trace > async_k).sum())},
                      "modes": async_rows,
                      "recovery": async_recovery},
+           "memory": {"shards": shards, "hidden": mem_hidden,
+                      "rows": mem_rows},
            "derived": derived}
     Path(args.out).write_text(json.dumps(out, indent=1) + "\n")
     print(f"bench_all/summary,0.0,"

@@ -291,6 +291,27 @@ def sample_staleness(cohort_size: int, round_ids, seed: int = 0,
     return np.minimum(out, p.shape[1] - 1)
 
 
+def home_addressing(cohorts, rows_per_shard: int):
+    """(home_device, local_row) of every cohort slot under the engine's
+    home-sharded arena layout — the host-side counterpart of
+    :func:`repro.fed.arena.address` (clients blocked contiguously,
+    L = ``rows_per_shard`` rows per device; the sentinel id I lands on a
+    real dead row because L·D ≥ I+1).
+
+    The engine does not ship these as scan inputs — inside the round
+    body the same addressing is two int32 ops on the replicated cohort
+    row against a static L, cheaper than sharding another (T, S) array —
+    but the bench and the routing property tests use this to reason
+    about row placement (per-device cohort fan-in, dead-row hits) and to
+    cross-check the traced arithmetic.
+    """
+    cohorts = np.asarray(cohorts, np.int64)
+    rows = int(rows_per_shard)
+    if rows < 1:
+        raise ValueError(f"rows_per_shard={rows} must be >= 1")
+    return cohorts // rows, cohorts % rows
+
+
 def sample_schedule(partition: Partition, batch_size: int,
                     round_ids, seed: int = 0,
                     cohorts=None) -> np.ndarray:

@@ -1,0 +1,239 @@
+"""Home-device sharding of the population-resident (I, …) state.
+
+PR 5 made the engine's *compute* cohort-native — per-round cost O(S),
+never O(I) — but its *memory* stayed O(I·model) per device: the
+error-feedback residual arena (and the population weight vector) were
+replicated across the mesh, every device holding every client's row.
+This module shards those arrays by **client home device** and routes the
+cohort's row traffic through collectives, so resident bytes per device
+scale as O(I/D·model):
+
+* **Addressing.**  Clients are blocked contiguously: with
+  L = ⌈(I+1)/D⌉ rows per device, client i lives at local row i mod L of
+  device i div L.  The +1 guarantees the sentinel id I (cohort padding,
+  dropped slots) maps to a *real, dead* row on the last device instead
+  of clamping into a live client's row — sentinel reads return the dead
+  row's zeros and sentinel writes are routed out of range and dropped.
+  The addressing is a pure function of the replicated per-round cohort
+  row and the static plan, so it is (re)computed at trace time inside
+  the scan body — two int32 ops against a constant — rather than
+  precomputed host-side and shipped as extra (T, S) scan inputs
+  (:func:`repro.data.partition.home_addressing` is the host-side
+  counterpart, used by the property tests and the bench to reason about
+  row placement).
+
+* **Gather = masked slice + one psum.**  Each device slices the cohort's
+  rows out of its local (L, …) block, masked to the rows it actually
+  homes, and a single ``psum`` merges the per-device contributions —
+  each row leaves exactly one device, so the collective moves O(S·model)
+  bytes, same order as the cohort-sized ``all_gather`` it replaces, but
+  against O(I/D) resident instead of O(I).
+
+* **Scatter = replicate the cohort rows, write back owner-locally.**
+  The compressed cohort rows are computed position-sharded (each device
+  owns S/D cohort slots); one psum of a position-placed buffer
+  replicates them, then every device writes back *only the rows it
+  homes* — the write itself is collective-free and purely local.
+
+* **Bit-exactness by construction.**  Routed rows are **never reduced in
+  float**: every leaf is bitcast to ``uint32`` before the masked psum
+  and bitcast back after.  Exactly one contributor per position is
+  nonzero, so the integer sum is exact row movement — float psum would
+  already be value-exact here, but ``(-0.0) + 0.0 == +0.0`` would flip
+  a sign bit and break the bitwise pin against the replicated-arena
+  references (``tests/data/mlp_reference.json``).  The same helpers
+  back the replicated hierarchical scatter (one psum over the flattened
+  (group, client) axes, replacing PR 7's two ordered ``all_gather``s).
+
+The helpers take the device index and the reduction as *arguments*
+(``my_id`` / ``psum_fn``), so the property tests emulate a D-device mesh
+in-process — per-device calls summed with plain ``np``/``jnp`` addition
+— while the engine passes ``jax.lax.axis_index`` / ``jax.lax.psum``
+under ``shard_map``.  Only 4-byte dtypes route (the engine's state is
+float32/int32/uint32 throughout); :func:`shardable` gates callers.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import mesh as mesh_mod
+
+PyTree = Any
+
+
+class ArenaPlan(NamedTuple):
+    """Static home-device layout of a population-resident array —
+    hashable, because it is part of the engine's compiled-chunk cache
+    key.
+
+    ``axes`` / ``axis_sizes`` name the mesh axes the leading (I, …) dim
+    shards over (all of them: the 1-D client mesh's ``("clients",)`` or
+    the 2-D group mesh's ``("groups", "clients")`` flattened
+    groups-major, matching ``PartitionSpec((axes,))`` device order).
+    """
+    num_clients: int                 # I — live rows; ids ≥ I are dead
+    rows_per_shard: int              # L = ceil((I+1)/D)
+    axes: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+
+    @property
+    def num_shards(self) -> int:
+        return int(np.prod(self.axis_sizes))
+
+    @property
+    def total_rows(self) -> int:     # I_pad = L·D ≥ I+1
+        return self.rows_per_shard * self.num_shards
+
+
+def make_plan(num_clients: int, mesh) -> ArenaPlan:
+    axes = mesh_mod.arena_axes(mesh)
+    sizes = tuple(int(mesh.shape[a]) for a in axes)
+    d = int(np.prod(sizes))
+    rows = -(-(int(num_clients) + 1) // d)
+    return ArenaPlan(int(num_clients), rows, axes, sizes)
+
+
+def address(plan: ArenaPlan, cids):
+    """(home_device, local_row) of each client id — the trace-time
+    addressing.  Valid for any id < ``total_rows`` (sentinel I
+    included)."""
+    cids = jnp.asarray(cids)
+    return cids // plan.rows_per_shard, cids % plan.rows_per_shard
+
+
+def shard_index(plan: ArenaPlan):
+    """This device's flat index along the arena's sharded dim (inside
+    ``shard_map`` only) — row-major over ``plan.axes``, matching the
+    ``PartitionSpec((axes,))`` device order."""
+    me = jnp.int32(0)
+    for name, size in zip(plan.axes, plan.axis_sizes):
+        me = me * size + jax.lax.axis_index(name)
+    return me
+
+
+def shardable(tree: PyTree) -> bool:
+    """True iff every leaf routes losslessly (4-byte dtype — the uint32
+    bitcast round-trip is exact)."""
+    leaves = jax.tree.leaves(tree)
+    return bool(leaves) and all(
+        jnp.dtype(l.dtype).itemsize == 4 for l in leaves)
+
+
+def as_bits(x):
+    """Reinterpret a 4-byte-dtype array as uint32 (shape-preserving)."""
+    if x.dtype == jnp.uint32:
+        return x
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def from_bits(b, dtype):
+    if jnp.dtype(dtype) == jnp.uint32:
+        return b
+    return jax.lax.bitcast_convert_type(b, jnp.dtype(dtype))
+
+
+def take_rows(plan: ArenaPlan, local: PyTree, cids, my_id) -> PyTree:
+    """One device's routing contribution to a cohort gather: the rows of
+    its local (L, …) block at the cohort's addresses, as uint32 bits,
+    zero-masked to the rows it homes.  Summing the D contributions
+    (``psum`` on the mesh, plain addition in the emulated tests) yields
+    every cohort row's exact bits — each position has exactly one
+    nonzero contributor."""
+    home, row = address(plan, cids)
+    mine = home == my_id
+    safe = jnp.where(mine, row, 0)
+
+    def leaf(a):
+        bits = as_bits(a[safe])
+        m = mine.reshape((-1,) + (1,) * (bits.ndim - 1))
+        return jnp.where(m, bits, jnp.zeros_like(bits))
+
+    return jax.tree.map(leaf, local)
+
+
+def gather_rows(plan: ArenaPlan, local: PyTree, cids, my_id,
+                psum_fn) -> PyTree:
+    """Cohort rows out of the home-sharded arena: masked per-device
+    slice + a single psum, bitcast back to the leaves' dtypes.  Ids
+    addressing dead rows (the sentinel I) return that row's stored
+    zeros."""
+    summed = psum_fn(take_rows(plan, local, cids, my_id))
+    return jax.tree.map(lambda b, a: from_bits(b, a.dtype), summed, local)
+
+
+def replicate_rows(rows: PyTree, length: int, offset, psum_fn) -> PyTree:
+    """Rebuild the full (length, …) cohort-row block from per-device
+    contiguous slices at ``offset`` — the position-sharded 1-D layout.
+    Bits are placed with ``dynamic_update_slice`` into a zero buffer and
+    psum-merged: exactly one contributor per row, exact bit movement."""
+    def place(u):
+        bits = as_bits(u)
+        buf = jnp.zeros((length,) + bits.shape[1:], jnp.uint32)
+        return jax.lax.dynamic_update_slice(
+            buf, bits, (offset,) + (0,) * (bits.ndim - 1))
+
+    summed = psum_fn(jax.tree.map(place, rows))
+    return jax.tree.map(lambda b, u: from_bits(b, u.dtype), summed, rows)
+
+
+def replicate_rows_2d(rows: PyTree, grid: Tuple[int, int],
+                      tile: Tuple[int, int], tile_offset, psum_fn) -> PyTree:
+    """Rebuild the full flattened (G·M_pad, …) cohort-row block from
+    per-device (g_loc·m_loc, …) tiles of the (G, M_pad) grid — the
+    2-D (groups, clients) mesh layout — with one psum over *both* axes
+    (replacing the two ordered ``all_gather``s of the pre-sharded
+    hierarchical scatter; identical bits, exact row movement)."""
+    g_tot, m_pad = grid
+    g_loc, m_loc = tile
+    g_off, m_off = tile_offset
+
+    def place(u):
+        bits = as_bits(u).reshape((g_loc, m_loc) + u.shape[1:])
+        buf = jnp.zeros((g_tot, m_pad) + bits.shape[2:], jnp.uint32)
+        return jax.lax.dynamic_update_slice(
+            buf, bits, (g_off, m_off) + (0,) * (bits.ndim - 2))
+
+    summed = psum_fn(jax.tree.map(place, rows))
+    return jax.tree.map(
+        lambda b, u: from_bits(
+            b.reshape((g_tot * m_pad,) + b.shape[2:]), u.dtype),
+        summed, rows)
+
+
+def scatter_rows(plan: ArenaPlan, local: PyTree, rows: PyTree, cids,
+                 live, my_id) -> PyTree:
+    """Owner-local write-back of replicated cohort rows into the
+    home-sharded arena — collective-free: every device writes only the
+    rows it homes; foreign and dead (sentinel / dropped) rows are routed
+    out of range and dropped.  Repeated live ids within one cohort do
+    not occur (cohorts are per-round subsets without replacement)."""
+    home, row = address(plan, cids)
+    tgt = jnp.where(jnp.logical_and(live, home == my_id), row,
+                    plan.rows_per_shard)
+    return jax.tree.map(
+        lambda a, u: a.at[tgt].set(u, mode="drop"), local, rows)
+
+
+def shard_spec(plan: ArenaPlan):
+    """PartitionSpec sharding a leading (I_pad, …) dim over all the
+    plan's mesh axes (groups-major on the 2-D mesh)."""
+    return jax.sharding.PartitionSpec(plan.axes)
+
+
+def pad_rows(tree: PyTree, plan: ArenaPlan) -> PyTree:
+    """Zero-pad each leaf's leading client dim from I to I_pad — the pad
+    rows are the dead tail (sentinel target included).  The engine calls
+    this under ``jit`` with a home-sharded ``out_shardings``, so each
+    device materializes only its own (L, …) block; the full (I_pad, …)
+    array never exists on any single device."""
+    pad = plan.total_rows - plan.num_clients
+
+    def leaf(x):
+        return jnp.pad(jnp.asarray(x),
+                       [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+
+    return jax.tree.map(leaf, tree)

@@ -34,7 +34,11 @@ Three compressors:
   scatters the updated residuals back — clients outside the round's
   cohort keep their residual untouched (client-side state never moves
   when its owner doesn't participate, and nothing residual-shaped ever
-  crosses the wire).
+  crosses the wire).  On a mesh the arena is **home-sharded** by default
+  (:mod:`repro.fed.arena`: each client's row lives on one device,
+  resident O(I/D·model) per device; cohort rows are routed bit-exactly),
+  so the float32 arena rows are the residual's *only* copy — the
+  compressor owns their semantics, the arena only their placement.
 
 Compression is a *client-side, per-client* operation, so any non-identity
 compressor forces the engine to materialize per-client messages even for
@@ -75,7 +79,14 @@ _F32_BYTES = 4          # wire width of scales / indices / dense floats
 @runtime_checkable
 class Compressor(Protocol):
     """Client-side upload compression (one client per call; the engine
-    vmaps over the client axis and threads ``resid`` through the scan)."""
+    vmaps over the client axis and threads ``resid`` through the scan).
+
+    ``init_client_state`` builds the population-resident residual arena
+    with a leading row per client.  The engine may ask for *more* rows
+    than there are clients (``num_clients`` is then the home-sharded
+    plan's padded row count I_pad ≥ I+1, :mod:`repro.fed.arena`): the
+    tail rows are dead — the sentinel id's reads land there and must
+    return zeros, so stateful compressors must zero-initialize."""
 
     name: str
     is_identity: bool

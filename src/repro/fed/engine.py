@@ -73,6 +73,7 @@ from repro.core.protocol import FedAlgorithm
 from repro.data.partition import (Partition, sample_cohorts,
                                   sample_groups, sample_schedule,
                                   sample_staleness)
+from repro.fed import arena as arena_mod
 from repro.fed import compression as compression_mod
 from repro.fed import staleness as staleness_mod
 from repro.fed.aggregation import Aggregation, PlainAggregation
@@ -296,10 +297,11 @@ class RoundCarry(NamedTuple):
 
 @functools.lru_cache(maxsize=64)
 def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
-              compressor=None, mesh=None, staleness=None):
+              compressor=None, mesh=None, staleness=None, plan=None,
+              ring_meta=None):
     """The jitted scan-over-rounds body — the engine's *only* scan-body
     builder — cached per (algorithm, aggregation, compressor, mesh,
-    staleness).
+    staleness, arena plan, ring layout).
 
     ``compressor=None`` (or the identity, normalized to ``None`` by
     :func:`run`) keeps the compressor slot of the :class:`RoundCarry`
@@ -357,16 +359,31 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
     Under a client mesh the same bodies run per **cohort shard**
     (``shard_map`` over the mesh's first axis): cohort ids and round
     weights are computed identically on every device from the replicated
-    cohort row and population weights, then sliced to the local S/D
-    slots; uploads stay local and the aggregate is one ``psum`` — of the
-    super-batch statistic (linear strategies) or of the strategy's
-    partial combine (secure: int32 masked fixed-point uploads keyed on
-    cohort positions, whose wraparound psum reproduces the single-device
-    Z_{2^32} aggregate bit-for-bit).  The residual arena is replicated;
-    the cohort's updated rows are ``all_gather``-ed (O(S·model), cohort-
-    sized) and scattered identically on every device.  Sentinel-padded
-    cohort slots (id = I, present when D ∤ S) carry exact-zero weights
-    and are dropped from every scatter (``mode="drop"``).
+    cohort row, then sliced to the local S/D slots; uploads stay local
+    and the aggregate is one ``psum`` — of the super-batch statistic
+    (linear strategies) or of the strategy's partial combine (secure:
+    int32 masked fixed-point uploads keyed on cohort positions, whose
+    wraparound psum reproduces the single-device Z_{2^32} aggregate
+    bit-for-bit).  Sentinel-padded cohort slots (id = I, present when
+    D ∤ S) carry exact-zero weights and are dropped from every scatter
+    (``mode="drop"``).
+
+    ``plan`` (an :class:`repro.fed.arena.ArenaPlan`, the default on any
+    mesh) selects the **home-sharded arena**: the population-resident
+    (I, …) state — the EF residual arena, the population weight vector
+    and (``ring_meta``) each async ring snapshot — is sharded by client
+    home device, resident O(I/D·model) per device.  Cohort rows are
+    gathered by a masked per-device slice + one bitcast psum (each row
+    leaves exactly one device, never reduced in float), compressed
+    position-sharded as before, replicated with one placed psum, and
+    written back owner-locally (collective-free).  ``plan=None`` on a
+    mesh is the replicated-arena reference mode: every device holds
+    every client's row, the cohort's updated rows are rebuilt everywhere
+    (one flattened-axes placed psum — O(S·model), cohort-sized) and
+    scattered identically on every device.  Both modes are bit-identical
+    to each other and to the single device (exact row movement either
+    way — pinned by ``tests/sharded_arena_check.py`` and the
+    ``mlp_reference.json`` harnesses, which run the sharded default).
 
     ``staleness`` (a :class:`repro.fed.staleness.StalenessConfig`) turns
     on the **async round mode**: the carry's params slot becomes a ring
@@ -401,12 +418,33 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
         else:
             (ts,) = rest
         session_key = jax.random.wrap_key_data(key_data)
-        num_clients = weights.shape[0]
+        num_clients = plan.num_clients if plan is not None \
+            else weights.shape[0]
 
         def one_round(carry, xs):
+            me = _apsum = None
+            if plan is not None:
+                me = arena_mod.shard_index(plan)
+
+                def _apsum(tree_):
+                    # the arena's one routing reduction: a psum over
+                    # every mesh axis the home-sharded rows span
+                    return jax.lax.psum(tree_, plan.axes)
+
             if is_async:
-                (phist, cshist), state, cstate = carry
+                (phist_in, cshist), state, cstate = carry
                 cohort_t, idx_t, stale_t, t = xs
+                packed = None
+                if ring_meta is None:
+                    phist = phist_in
+                else:
+                    # reconstruct the full snapshot ring from this
+                    # device's packed column block: one placed psum,
+                    # exact bit movement (each column has exactly one
+                    # contributor)
+                    packed = staleness_mod.ring_unshard(
+                        phist_in, ring_meta, me, _apsum)
+                    phist = staleness_mod.unpack_ring(packed, ring_meta)
                 params = jax.tree.map(lambda h: h[0], phist)
                 has_cs = len(jax.tree.leaves(cshist)) > 0
             else:
@@ -423,18 +461,35 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                 def push(h, v):
                     return jnp.concatenate([v[None], h[:-1]], axis=0)
 
-                nph = jax.tree.map(lambda h, p: push(h, p), phist, params)
+                if ring_meta is None:
+                    nph = jax.tree.map(lambda h, p: push(h, p), phist,
+                                       params)
+                else:
+                    # pack the new snapshot, shift the packed ring,
+                    # carry only this device's column block
+                    nph = staleness_mod.ring_localize(
+                        push(packed,
+                             staleness_mod.pack_snapshot(params,
+                                                         ring_meta)),
+                        ring_meta, me)
                 ncs = jax.tree.map(lambda h, c: push(h, c), cshist,
                                    algorithm.client_state(state))
                 return ((nph, ncs), state, cstate), None
 
             # cohort-wide round weights, computed identically on every
-            # device (cohort_t and weights are replicated): gather the
-            # cohort's population weights — sentinel pads (id = I) clamp
-            # in the gather and are forced to exact zero — then apply
-            # the strategy's reweighting.
+            # device from the replicated cohort row: gather the cohort's
+            # population weights — sentinel pads (id = I) clamp in the
+            # replicated gather / hit their dead stored-zero row in the
+            # home-sharded one, and are forced to exact zero either way
+            # — then apply the strategy's reweighting.
             live_full = cohort_t < num_clients
-            w_c = jnp.where(live_full, weights[cohort_t], 0.0)
+            if plan is None:
+                w_c = jnp.where(live_full, weights[cohort_t], 0.0)
+            else:
+                w_c = jnp.where(
+                    live_full,
+                    arena_mod.gather_rows(plan, weights, cohort_t, me,
+                                          _apsum), 0.0)
             rw_full = aggregation.cohort_weights(w_c, combine, num_clients)
             tau_full = alive_full = alive_i32 = None
             if is_async:
@@ -626,8 +681,31 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                 # gather the cohort's residuals from the (I, …) arena;
                 # PRF streams are keyed on *global* client ids, so a
                 # client's rounding/threshold draws are identical
-                # whichever cohort slot (or device) it lands on
-                resid = jax.tree.map(lambda a: a[cids], cstate)
+                # whichever cohort slot (or device) it lands on.  Under
+                # the home-sharded plan the full cohort's rows are
+                # routed out of the local (L, …) blocks (masked slice +
+                # one bitcast psum) and then sliced to this device's
+                # cohort slots — exactly the rows `a[cids]` reads in the
+                # replicated modes, bit for bit.
+                if plan is None:
+                    resid = jax.tree.map(lambda a: a[cids], cstate)
+                else:
+                    def _local_rows(v):
+                        if hier is not None:
+                            g = v.reshape((g_tot, m_pad) + v.shape[1:])
+                            tile = jax.lax.dynamic_slice(
+                                g, (g_off, m_off) + (0,) * (v.ndim - 1),
+                                (g_loc, m_loc) + v.shape[1:])
+                            return tile.reshape((g_loc * m_loc,)
+                                                + v.shape[1:])
+                        return jax.lax.dynamic_slice(
+                            v, (offset,) + (0,) * (v.ndim - 1),
+                            (s_loc,) + v.shape[1:])
+
+                    resid = jax.tree.map(
+                        _local_rows,
+                        arena_mod.gather_rows(plan, cstate, cohort_t,
+                                              me, _apsum))
                 kd = jax.random.key_data(key_t).reshape(-1) \
                     .astype(jnp.uint32)
                 k0, k1 = kd[0], kd[-1]
@@ -658,19 +736,35 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
                         new_resid, resid)
 
                 def _scatter_resid(cstate, new_resid):
+                    if plan is not None:
+                        # home-sharded write-back: replicate the
+                        # cohort's updated rows (one placed bitcast
+                        # psum), then every device writes only the rows
+                        # it homes — the write itself is collective-
+                        # free, and sentinel / foreign rows are routed
+                        # out of range and dropped
+                        if hier is not None:
+                            rows = arena_mod.replicate_rows_2d(
+                                new_resid, (g_tot, m_pad),
+                                (g_loc, m_loc), (g_off, m_off), _apsum)
+                        else:
+                            rows = arena_mod.replicate_rows(
+                                new_resid, cohort_t.shape[0], offset,
+                                _apsum)
+                        return arena_mod.scatter_rows(
+                            plan, cstate, rows, cohort_t, live_full, me)
                     if hier is not None:
-                        # two ordered cohort-sized collectives rebuild
-                        # the whole (G·M_pad, …) update block on every
-                        # device, slot order matching the flat cohort
-                        # row, so the replicated arena stays replicated
-                        def _gather2(u):
-                            u = u.reshape((g_loc, m_loc) + u.shape[1:])
-                            u = jax.lax.all_gather(u, hier[1], axis=1,
-                                                   tiled=True)
-                            u = jax.lax.all_gather(u, hier[0], axis=0,
-                                                   tiled=True)
-                            return u.reshape((-1,) + u.shape[2:])
-                        upd = jax.tree.map(_gather2, new_resid)
+                        # one placed psum over the flattened (group,
+                        # client) axes rebuilds the whole (G·M_pad, …)
+                        # update block on every device, slot order
+                        # matching the flat cohort row (bitcast — exact
+                        # row movement, replacing the two ordered
+                        # all_gathers this path used to chain), so the
+                        # replicated arena stays replicated bit-for-bit
+                        upd = arena_mod.replicate_rows_2d(
+                            new_resid, (g_tot, m_pad), (g_loc, m_loc),
+                            (g_off, m_off),
+                            lambda t_: jax.lax.psum(t_, hier))
                         at_ids = cohort_t
                     elif shard is None:
                         upd, at_ids = new_resid, cids
@@ -800,11 +894,23 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
         return jax.jit(chunk, donate_argnums=donate)
 
     spec = jax.sharding.PartitionSpec
+    # the population-resident (I_pad, …) state — residual arena and
+    # weight vector — shards its leading (home-device) dim over every
+    # mesh axis under a plan; without one it is replicated (the
+    # reference mode).  The async carry slot is (phist, cshist): the
+    # packed ring shards its flat column dim, cshist stays replicated.
+    row_spec = spec() if plan is None else spec(plan.axes)
+    if is_async:
+        carry_spec = (spec() if ring_meta is None
+                      else spec(None, plan.axes), spec())
+    else:
+        carry_spec = spec()
+
     if tuple(mesh.axis_names) == ("groups", "clients"):
         # hierarchical 2-D mesh: idx_chunk arrives group-blocked
         # (T, G, M_pad, …) from run() and shards its (group, member)
-        # dims; the flat (T, G·M_pad) cohort rows, weights and arena are
-        # replicated, and both tree reductions are psums inside the body
+        # dims; the flat (T, G·M_pad) cohort rows are replicated, and
+        # both tree reductions are psums inside the body
         hier_axes = mesh.axis_names
 
         def hier_body(params, state, cstate, x_train, y_train, weights,
@@ -815,9 +921,11 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
 
         fn = mesh_mod.shard_map_fn(
             hier_body, mesh,
-            in_specs=(spec(),) * 8 + (spec(None, "groups", "clients"),)
+            in_specs=(carry_spec, spec(), row_spec, spec(), spec(),
+                      row_spec, spec(), spec(),
+                      spec(None, "groups", "clients"))
             + (spec(),) * n_tail,
-            out_specs=(spec(), spec(), spec()))
+            out_specs=(carry_spec, spec(), row_spec))
         return jax.jit(fn, donate_argnums=donate)
 
     axis = mesh.axis_names[0]
@@ -827,17 +935,15 @@ def _chunk_fn(algorithm: FedAlgorithm, aggregation: Aggregation,
         return chunk(params, state, cstate, x_train, y_train, weights,
                      key_data, cohort_chunk, idx_chunk, *rest, shard=axis)
 
-    # the cohort axis of idx_chunk is sharded; cohort ids, population
-    # weights, the staleness-trace rows and the residual arena are
-    # replicated (the arena's rows belong to arbitrary clients, not to a
-    # device — the cohort-sized all_gather above keeps the copies
-    # identical)
+    # the cohort axis of idx_chunk is sharded; cohort ids and the
+    # staleness-trace rows are replicated (their rows belong to
+    # per-round cohort positions, not to a device)
     fn = mesh_mod.shard_map_fn(
         sharded_body, mesh,
-        in_specs=(spec(), spec(), spec(), spec(), spec(), spec(),
-                  spec(), spec(), spec(None, axis))
+        in_specs=(carry_spec, spec(), row_spec, spec(), spec(),
+                  row_spec, spec(), spec(), spec(None, axis))
         + (spec(),) * n_tail,
-        out_specs=(spec(), spec(), spec()))
+        out_specs=(carry_spec, spec(), row_spec))
     return jax.jit(fn, donate_argnums=donate)
 
 
@@ -890,7 +996,8 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
         seed: int = 0, eval_every: int = 1, eval_samples: int = 10000,
         aggregation: Optional[Aggregation] = None,
         compressor=None, mesh=None, staleness=None,
-        staleness_trace=None) -> tuple[PyTree, History]:
+        staleness_trace=None,
+        arena: Optional[str] = None) -> tuple[PyTree, History]:
     """Run ``algorithm`` on ``task`` for ``rounds`` rounds.
 
     ``task`` — a :class:`repro.fed.tasks.base.FedTask`; it supplies the
@@ -928,6 +1035,17 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
     schedule, and delays past K become dropouts (weight 0, secure pair
     masks cancelled, recovery bytes charged to ``History.comm["async"]``).
     An all-zero trace is bit-identical to ``staleness=None``.
+
+    ``arena`` — placement of the population-resident (I, …) state on a
+    mesh.  ``"sharded"`` (the default whenever ``mesh`` is set) homes
+    each client's row — EF residuals, population weight, each async
+    ring snapshot — on one device (:mod:`repro.fed.arena`), so resident
+    bytes per device scale O(I/D·model); ``"replicated"`` keeps the
+    pre-PR-9 every-device-holds-everything layout (the memory-bench
+    reference).  The two are **bit-identical** — rows are routed as
+    uint32 bitcasts, never reduced in float — so the choice is purely a
+    memory/layout knob.  Ignored without a mesh (single-device has
+    nothing to shard).
     """
     aggregation = aggregation if aggregation is not None \
         else PlainAggregation()
@@ -1021,38 +1139,78 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
                 if trace_pad is not None:
                     trace_pad = np.concatenate(
                         [trace_pad, np.zeros((rounds, pad), np.int64)], 1)
+    if arena not in (None, "replicated", "sharded"):
+        raise ValueError(
+            f"arena={arena!r} not in (None, 'replicated', 'sharded')")
+    plan = None
+    if mesh is not None and (arena or "sharded") == "sharded":
+        plan = arena_mod.make_plan(part.num_clients, mesh)
     cohort_dev = jnp.asarray(cohorts, jnp.int32)             # one transfer
     idx_dev = jnp.asarray(schedule, jnp.int32)               # one transfer
     x_train = _staged(data.x_train)
     y_train = _staged(data.y_train)
     weights = jnp.asarray(algorithm.client_weights(part, batch_size),
                           jnp.float32)
+    arena_sharding = None
+    if plan is not None:
+        # the population weight vector is itself (I,)-resident: pad to
+        # the home layout (dead tail rows store exact zeros — the
+        # sentinel's reads) and home-shard it like the arena.  Built
+        # under jit with out_shardings so each device materializes only
+        # its own rows — the full (I_pad, …) array never exists on any
+        # single device (at real populations it would not fit one)
+        arena_sharding = jax.sharding.NamedSharding(
+            mesh, arena_mod.shard_spec(plan))
+        weights = jax.jit(lambda w: arena_mod.pad_rows(w, plan),
+                          out_shardings=arena_sharding)(weights)
     key_data = jax.random.key_data(jax.random.key(seed + 10_000))
     stale_dev = None if trace_pad is None \
         else jnp.asarray(trace_pad, jnp.int32)
-    run_chunk = _chunk_fn(algorithm, aggregation, compressor, mesh,
-                          staleness)
 
     # chunk inputs are donated — never hand the caller's param buffers to
     # the donating executable (the caller may reuse them across runs)
     params = jax.tree.map(jnp.array, params)
     state = algorithm.init_state(params)
     ring = None
+    ring_meta = None
     if staleness is not None:
         # snapshot ring, newest first: slot 0 holds the current params;
         # rounds earlier than the run see the init point, so a delayed
         # slot in round 1 replays against the initial params
         depth = staleness.max_staleness + 1
-        ring = (jax.tree.map(lambda p: jnp.repeat(p[None], depth, axis=0),
-                             params),
-                jax.tree.map(lambda c: jnp.repeat(jnp.asarray(c)[None],
-                                                  depth, axis=0),
-                             algorithm.client_state(state)))
+        phist = jax.tree.map(lambda p: jnp.repeat(p[None], depth, axis=0),
+                             params)
+        cshist = jax.tree.map(lambda c: jnp.repeat(jnp.asarray(c)[None],
+                                                   depth, axis=0),
+                              algorithm.client_state(state))
+        if plan is not None:
+            # home-sharded mode: each ring snapshot shards its packed
+            # flat column dim over the mesh — O((K+1)/D·model) resident
+            # per device.  Falls back to the replicated ring when a
+            # param leaf cannot route losslessly (non-4-byte dtype).
+            ring_meta = staleness_mod.ring_meta(params, plan.num_shards)
+        if ring_meta is not None:
+            phist = jax.device_put(
+                staleness_mod.pack_ring(phist, ring_meta),
+                jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec(None, plan.axes)))
+        ring = (phist, cshist)
     cstate: PyTree = ()
     if compressor is not None:
-        cstate = compressor.init_client_state(
-            _upload_avals(algorithm, x_train, y_train, batch_size, params),
-            part.num_clients)
+        avals = _upload_avals(algorithm, x_train, y_train, batch_size,
+                              params)
+        if plan is None:
+            cstate = compressor.init_client_state(avals, part.num_clients)
+        else:
+            # home-shard the EF arena at birth: out_shardings makes XLA
+            # produce each device's (L, …) block in place — no full
+            # (I_pad, model) transient on the home device
+            cstate = jax.jit(
+                lambda: compressor.init_client_state(
+                    avals, plan.total_rows),
+                out_shardings=arena_sharding)()
+    run_chunk = _chunk_fn(algorithm, aggregation, compressor, mesh,
+                          staleness, plan, ring_meta)
     measure = evaluator(task, data, eval_samples)
     ledger = compression_mod.round_bytes(algorithm, aggregation, compressor,
                                          params, part.num_clients)
@@ -1100,7 +1258,20 @@ def run(algorithm: FedAlgorithm, data, part: Partition, *, task,
                     ring, state, cstate, x_train, y_train, weights,
                     key_data, cohort_dev[done:done + n],
                     idx_dev[done:done + n], stale_dev[done:done + n], ts)
-                params = jax.tree.map(lambda h: h[0], ring[0])
+                if ring_meta is None:
+                    params = jax.tree.map(lambda h: h[0], ring[0])
+                else:
+                    # slot 0 out of the packed sharded ring — then
+                    # *replicate* it: eager slices of the column-sharded
+                    # packed array stay device-sharded, and a sharded
+                    # params input would make the jitted eval probe
+                    # partition (and so reassociate) its reductions —
+                    # the replicated layout keeps eval bit-identical to
+                    # the replicated-ring mode
+                    params = jax.device_put(
+                        staleness_mod.unpack_snapshot(ring[0], ring_meta),
+                        jax.sharding.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec()))
         done += n
         metrics = algorithm.round_metrics(state)
         record(hist, done, measure, params,

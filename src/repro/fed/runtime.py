@@ -75,11 +75,13 @@ def run(task: FedTask, algorithm: protocol.FedAlgorithm, data,
         seed: int = 0, eval_every: int = 1, eval_samples: int = 10000,
         aggregation: Optional[agg_mod.Aggregation] = None,
         compressor=None, mesh=None, staleness=None,
-        staleness_trace=None) -> tuple:
+        staleness_trace=None, arena=None) -> tuple:
     """The generic task × algorithm entry all four wrappers reduce to.
 
     ``params=None`` initializes from ``task.init_params(key(seed))``
-    (in :func:`engine.run`).
+    (in :func:`engine.run`).  ``arena=`` ("sharded" — the mesh default —
+    or "replicated") places the population-resident (I, …) state; see
+    :func:`repro.fed.engine.run`.
     """
     return engine.run(algorithm, data, part, task=task,
                       batch_size=batch_size, rounds=rounds, params=params,
@@ -87,7 +89,7 @@ def run(task: FedTask, algorithm: protocol.FedAlgorithm, data,
                       eval_samples=eval_samples, aggregation=aggregation,
                       compressor=compressor, mesh=mesh,
                       staleness=staleness,
-                      staleness_trace=staleness_trace)
+                      staleness_trace=staleness_trace, arena=arena)
 
 
 def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
@@ -98,7 +100,7 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
              fused: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
              compressor=None, mesh=None, staleness=None,
-             staleness_trace=None) -> tuple:
+             staleness_trace=None, arena=None) -> tuple:
     """Algorithm 1 on the eq.-(11) objective F(ω) + λ‖ω‖².
 
     ``secure=True`` is shorthand for ``aggregation=aggregation.secure()``
@@ -116,7 +118,7 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
                compressor=compressor, mesh=mesh, staleness=staleness,
-               staleness_trace=staleness_trace)
+               staleness_trace=staleness_trace, arena=arena)
 
 
 def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
@@ -126,7 +128,7 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
              eval_samples: int = 10000, secure: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
              compressor=None, mesh=None, staleness=None,
-             staleness_trace=None) -> tuple:
+             staleness_trace=None, arena=None) -> tuple:
     """Algorithm 2 on eq. (18): min ‖ω‖² s.t. F(ω) ≤ U.
 
     ``secure=True`` masks the (value, gradient) upload q1 — the secure
@@ -142,7 +144,7 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
                compressor=compressor, mesh=mesh, staleness=staleness,
-               staleness_trace=staleness_trace)
+               staleness_trace=staleness_trace, arena=arena)
 
 
 def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
@@ -152,7 +154,7 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
                eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
                compressor=None, mesh=None, staleness=None,
-               staleness_trace=None) -> tuple:
+               staleness_trace=None, arena=None) -> tuple:
     """E = 1 SGD baseline [3],[4] on the same objective as Algorithm 1."""
     task = _resolve_task(task, data, hidden)
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha))
@@ -161,7 +163,7 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
                compressor=compressor, mesh=mesh, staleness=staleness,
-               staleness_trace=staleness_trace)
+               staleness_trace=staleness_trace, arena=arena)
 
 
 def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
@@ -172,7 +174,7 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
                eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
                compressor=None, mesh=None, staleness=None,
-               staleness_trace=None) -> tuple:
+               staleness_trace=None, arena=None) -> tuple:
     """FedAvg [3] / PR-SGD [5]: E local steps per round, then model average.
 
     Per-client batches are (I, E, B) samples; aggregation weight N_i/N.
@@ -189,4 +191,4 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
                compressor=compressor, mesh=mesh, staleness=staleness,
-               staleness_trace=staleness_trace)
+               staleness_trace=staleness_trace, arena=arena)

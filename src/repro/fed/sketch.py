@@ -152,7 +152,9 @@ class CountSketchCompressor:
                 or not 1 <= int(b) <= 30:
             raise ValueError(f"scale_bits={b!r} outside [1, 30]")
 
-    # -- per-client state (the same population-resident arena as top-k) --
+    # -- per-client state (the same population-resident arena as top-k:
+    # home-sharded on a mesh, with `num_clients` then the plan's padded
+    # I_pad row count whose zero tail serves the sentinel's dead reads) --
 
     def init_client_state(self, msg_avals, num_clients: int):
         return jax.tree.map(

@@ -34,14 +34,30 @@ Three pieces live here:
   slowest member (1 + max τ, the barrier cost); an async round always
   takes unit time (stale uploads just arrive late and discounted);
   drop-stragglers takes unit time but discards every delayed upload.
+* **The sharded ring representation** — under the engine's home-sharded
+  arena mode each param snapshot of the K+1-deep ring is itself sharded
+  over the mesh, so async memory is O((K+1)/D·model) per device instead
+  of O((K+1)·model).  The ring travels through the scan as one packed
+  (K+1, n_pad/D) uint32 leaf per device (:class:`RingMeta` +
+  ``pack_ring`` / ``unpack_ring`` / ``ring_unshard`` / ``ring_localize``
+  below); reconstruction and re-sharding are exact bit movement (bitcast
+  + placed psum, see :mod:`repro.fed.arena`), so the sharded-ring
+  trajectories equal the replicated-ring ones bitwise.  The client-state
+  half of the ring stays replicated — it is the empty pytree for the
+  sum-combine algorithms and a scalar counter for FedAvg, so there is
+  nothing worth sharding (and non-4-byte dtypes could not route
+  losslessly).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple, Union
+from typing import Any, NamedTuple, Optional, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.fed import arena as arena_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +196,93 @@ def dropped_per_round(trace, max_staleness: int) -> np.ndarray:
     recovery-byte ledger charge."""
     return (np.asarray(trace) > int(max_staleness)).sum(axis=1) \
         .astype(np.int64)
+
+
+class RingMeta(NamedTuple):
+    """Static layout of the packed, mesh-sharded snapshot ring —
+    hashable (part of the engine's compiled-chunk cache key).
+
+    A params pytree flattens (tree-leaf order) into ``n`` 4-byte
+    elements, bitcast to uint32 and zero-padded to ``chunk · shards``;
+    each device carries the (K+1, chunk) column block at offset
+    ``device_index · chunk``.
+    """
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    n: int                           # flat element count (pre-pad)
+    chunk: int                       # elements per device
+    shards: int
+
+
+def ring_meta(params, num_shards: int) -> Optional[RingMeta]:
+    """Packed-ring layout for ``params`` over ``num_shards`` devices, or
+    ``None`` when the snapshots cannot route losslessly (a non-4-byte
+    leaf) — the engine then falls back to the replicated ring."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    if not leaves or any(jnp.dtype(l.dtype).itemsize != 4
+                         for l in leaves):
+        return None
+    shapes = tuple(tuple(int(d) for d in l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype).name for l in leaves)
+    n = int(sum(int(np.prod(s)) if s else 1 for s in shapes))
+    chunk = -(-n // int(num_shards))
+    return RingMeta(treedef, shapes, dtypes, n, chunk, int(num_shards))
+
+
+def pack_snapshot(params, meta: RingMeta):
+    """One snapshot → its packed (n_pad,) uint32 row (bitcast, exact)."""
+    flat = jnp.concatenate([arena_mod.as_bits(l).reshape(-1)
+                            for l in jax.tree.leaves(params)])
+    return jnp.pad(flat, (0, meta.chunk * meta.shards - meta.n))
+
+
+def pack_ring(phist, meta: RingMeta):
+    """A replicated ring (leaves (K+1, …)) → packed (K+1, n_pad)."""
+    flat = jnp.concatenate(
+        [arena_mod.as_bits(h).reshape(h.shape[0], -1)
+         for h in jax.tree.leaves(phist)], axis=1)
+    return jnp.pad(flat, ((0, 0), (0, meta.chunk * meta.shards - meta.n)))
+
+
+def _split_row(flat, meta: RingMeta, lead: Tuple[int, ...]):
+    out, off = [], 0
+    for shape, dtype in zip(meta.shapes, meta.dtypes):
+        size = int(np.prod(shape)) if shape else 1
+        part = jax.lax.slice_in_dim(flat, off, off + size,
+                                    axis=flat.ndim - 1)
+        out.append(arena_mod.from_bits(
+            part.reshape(lead + shape), jnp.dtype(dtype)))
+        off += size
+    return jax.tree_util.tree_unflatten(meta.treedef, out)
+
+
+def unpack_ring(packed, meta: RingMeta):
+    """Packed (K+1, n_pad) → the ring pytree (leaves (K+1, …))."""
+    depth = packed.shape[0]
+    return _split_row(packed[:, :meta.n], meta, (depth,))
+
+
+def unpack_snapshot(packed, meta: RingMeta, slot: int = 0):
+    """One ring slot back as a params pytree (run() reads slot 0 at
+    every chunk boundary for eval)."""
+    return _split_row(packed[slot, :meta.n], meta, ())
+
+
+def ring_unshard(local, meta: RingMeta, my_id, psum_fn):
+    """In-body reconstruction of the full packed ring from the local
+    (K+1, chunk) block: place at this device's column offset, one psum
+    (each column has exactly one contributor — exact bit movement)."""
+    buf = jnp.zeros((local.shape[0], meta.chunk * meta.shards),
+                    jnp.uint32)
+    buf = jax.lax.dynamic_update_slice(buf, local, (0, my_id * meta.chunk))
+    return psum_fn(buf)
+
+
+def ring_localize(packed, meta: RingMeta, my_id):
+    """This device's (K+1, chunk) column block of the packed ring."""
+    return jax.lax.dynamic_slice(
+        packed, (0, my_id * meta.chunk), (packed.shape[0], meta.chunk))
 
 
 def diurnal_delay_probs(rounds: int, max_delay: int = 4,

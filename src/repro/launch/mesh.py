@@ -94,6 +94,25 @@ def make_group_mesh(group_shards: int = 0, client_shards: int = 1):
     return make_mesh((g, client_shards), ("groups", "clients"))
 
 
+def arena_axes(mesh) -> tuple:
+    """The axes a **population-resident** (I, …) array's leading dim
+    shards over under the engine's home-device arena: *every* axis of
+    the federated mesh, in ``PartitionSpec`` order — ``("clients",)`` on
+    the 1-D client mesh, ``("groups", "clients")`` flattened groups-
+    major on the 2-D group mesh — so the arena composes with both mesh
+    shapes and D is always the full device count.  (The *cohort*, by
+    contrast, shards positionally: its layout is per-round, the arena's
+    is per-client.)"""
+    return tuple(mesh.axis_names)
+
+
+def arena_spec(mesh):
+    """PartitionSpec homing a leading client dim over the whole mesh
+    (the spec behind :func:`repro.fed.arena.shard_spec` and the packed
+    async ring's ``P(None, axes)`` column sharding)."""
+    return jax.sharding.PartitionSpec(arena_axes(mesh))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

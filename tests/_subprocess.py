@@ -1,0 +1,45 @@
+"""The one subprocess-spawn helper behind every virtual-device harness.
+
+The mesh checks (``tests/*_check.py``) need ``XLA_FLAGS
+--xla_force_host_platform_device_count=N`` set *before* jax initializes,
+while the main pytest process runs on one device — so each harness runs
+as a subprocess and prints an ``..._OK`` marker on success.  Five test
+modules used to re-implement the same spawn-and-assert boilerplate (and
+every check script the same env preamble); both halves live here now:
+
+* :func:`run_check` — spawn a check script from the tests directory,
+  assert a zero exit and the marker (used by the pytest wrappers).
+* :func:`setup_virtual_devices` — the env/sys.path preamble a check
+  script calls *first thing*, before importing jax (scripts run with
+  ``tests/`` on ``sys.path``, so ``from _subprocess import ...`` works
+  both under ``python tests/foo_check.py`` and under the spawned run).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+TESTS_DIR = Path(__file__).resolve().parent
+
+
+def setup_virtual_devices(n: int) -> None:
+    """Point jax at ``n`` virtual CPU devices and the repo's ``src/``.
+    Must run before the first ``import jax`` of the process."""
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(n)}")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, str(TESTS_DIR.parent / "src"))
+
+
+def run_check(script: str, *args: str, marker: str,
+              timeout: int = 900) -> subprocess.CompletedProcess:
+    """Spawn ``tests/<script>`` and assert it printed ``marker``."""
+    out = subprocess.run(
+        [sys.executable, str(TESTS_DIR / script), *args],
+        capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert marker in out.stdout, out.stdout + out.stderr
+    return out

@@ -23,18 +23,14 @@ Usage (mirrors ``task_bitexact_check.py``)::
     python tests/async_engine_check.py [--mesh]
 """
 import json
-import os
 import sys
 from pathlib import Path
 
+from _subprocess import setup_virtual_devices
+
 MESH = "--mesh" in sys.argv
 
-if MESH:
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + " --xla_force_host_platform_device_count=2")
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
-
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+setup_virtual_devices(2 if MESH else 1)
 
 REF_PATH = Path(__file__).resolve().parent / "data" / "mlp_reference.json"
 

@@ -5,14 +5,9 @@ activation constraints change the schedule, not the math.
 
 Run directly:  python tests/distributed_check.py
 """
-import os
+from _subprocess import setup_virtual_devices
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-
-import sys
-from pathlib import Path
-
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+setup_virtual_devices(8)
 
 import dataclasses
 

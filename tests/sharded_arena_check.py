@@ -1,0 +1,135 @@
+"""Home-sharded arena A/B harness: ``arena="sharded"`` must reproduce
+``arena="replicated"`` **bitwise** on the same mesh.
+
+The home-device arena (``repro.fed.arena``) re-routes every touch of the
+population-resident state — weight gather, EF-residual gather/scatter,
+the packed async snapshot ring — through uint32-bitcast collectives with
+exactly one contributor per position, so the two arena modes are
+designed to be *identical to the last bit*, not merely close.  This
+harness pins that contract per round (params and the full metric
+trajectory, ``float.hex()``-exact) for every routing surface:
+
+* plain weights-only gather (no compressor);
+* top-k error feedback (gather → compress → owner-local scatter);
+* the sketched secure wire over a sentinel-padded cohort;
+* FedAvg + top-k (the other algorithm family);
+* async rounds, nonzero staleness trace (the column-sharded packed
+  snapshot ring, stale reconstruction + dropout recovery), plain and
+  with EF;
+* the hierarchical tree on 2-D (groups, clients) meshes — both
+  degenerate layouts on 2 devices, the full 2×2 grid on 4;
+* an odd population (I = 7) so the +1 sentinel row pads the arena.
+
+Usage::
+
+    python tests/sharded_arena_check.py [--devices N]   # default 2
+"""
+import sys
+
+from _subprocess import setup_virtual_devices
+
+DEVICES = 2
+if "--devices" in sys.argv:
+    DEVICES = int(sys.argv[sys.argv.index("--devices") + 1])
+
+setup_virtual_devices(DEVICES)
+
+import jax
+import numpy as np
+
+from repro.data import partition, synthetic
+from repro.fed import aggregation, compression, runtime
+from repro.fed import sketch as fsk
+from repro.fed.staleness import StalenessConfig
+from repro.launch.mesh import make_client_mesh, make_group_mesh
+
+
+def hexes(xs):
+    return [float.hex(float(x)) for x in xs]
+
+
+def assert_ab(name, fn, data, part, mesh, kw, extra):
+    """arena="sharded" == arena="replicated": params and trajectory
+    bitwise, on the same mesh."""
+    p_r, h_r = fn(data, part, mesh=mesh, arena="replicated", **kw, **extra)
+    p_s, h_s = fn(data, part, mesh=mesh, arena="sharded", **kw, **extra)
+    for a, b in zip(jax.tree.leaves(p_r), jax.tree.leaves(p_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    assert list(h_r.rounds) == list(h_s.rounds), name
+    for key in ("train_cost", "test_accuracy"):
+        hr = hexes(getattr(h_r, key))
+        hs = hexes(getattr(h_s, key))
+        assert hr == hs, (
+            f"{name}: sharded-arena {key} drifted from replicated\n"
+            f"  replicated {hr}\n  sharded    {hs}")
+    print(f"{name:26s} params + trajectory bitwise OK")
+
+
+def main():
+    data = synthetic.classification_dataset(n_train=2000, n_test=500,
+                                            seed=0)
+    part = partition.iid(2000, 10, seed=0)
+    mesh = make_client_mesh(DEVICES)
+    kw = dict(batch_size=10, rounds=6, eval_every=3, eval_samples=300,
+              seed=3)
+
+    cases = [
+        ("alg1/plain", runtime.run_alg1, {}),
+        ("alg1/topk8+secure", runtime.run_alg1,
+         {"compressor": compression.topk(0.2, bits=8), "secure": True}),
+        ("alg1/sketch+secure3", runtime.run_alg1,
+         {"aggregation": aggregation.secure(num_sampled=3),
+          "compressor": fsk.sketch(rows=4, cols=512, fraction=0.02,
+                                   keep=64)}),
+        ("fedavg/topk", runtime.run_fedavg,
+         {"local_steps": 2, "lr_a": 2.0,
+          "compressor": compression.topk(0.3)}),
+    ]
+    # async: a nonzero trace (stale slots + dropouts) drives the packed
+    # snapshot ring through reconstruction every round; with EF on top,
+    # ring and arena shard simultaneously
+    acfg = StalenessConfig(max_staleness=2,
+                           delay_probs=(0.5, 0.2, 0.15, 0.1, 0.05))
+    cases += [
+        ("async2/plain", runtime.run_alg1, {"staleness": acfg}),
+        ("async2/topk", runtime.run_alg1,
+         {"staleness": acfg, "compressor": compression.topk(0.3)}),
+    ]
+    for name, fn, extra in cases:
+        assert_ab(name, fn, data, part, mesh, kw, extra)
+
+    # the async trace actually bit, or the two async rows are sync reruns
+    _, h_sync = runtime.run_alg1(data, part, mesh=mesh, **kw)
+    _, h_async = runtime.run_alg1(data, part, mesh=mesh, staleness=acfg,
+                                  **kw)
+    assert hexes(h_sync.train_cost) != hexes(h_async.train_cost), \
+        "nonzero trace left the trajectory on the sync one — dead check"
+
+    # hierarchical tree: 2-D grids covering both one-axis-degenerate
+    # layouts (2 devices) or the full grid (4 devices) — the arena
+    # shards over the *flattened* (groups, clients) device order
+    hier = aggregation.hierarchical(aggregation.secure(), groups=4)
+    grids = ([(2, 2)] if DEVICES == 4 else [(2, 1), (1, 2)])
+    for g, c in grids:
+        gmesh = make_group_mesh(g, c)
+        assert_ab(f"hier/secure {g}x{c}", runtime.run_alg1, data, part,
+                  gmesh, kw, {"aggregation": hier})
+        assert_ab(f"hier/topk8 {g}x{c}", runtime.run_alg1, data, part,
+                  gmesh, kw,
+                  {"aggregation": hier,
+                   "compressor": compression.topk(0.2, bits=8)})
+
+    # odd population: I = 7 on D devices leaves dead pad rows (and homes
+    # the sentinel id 7 on a real dead row)
+    part7 = partition.iid(700, 7, seed=0)
+    kw7 = dict(batch_size=5, rounds=4, eval_every=2, eval_samples=200,
+               seed=3)
+    assert_ab("I=7/topk", runtime.run_alg1, data, part7, mesh, kw7,
+              {"compressor": compression.topk(0.3)})
+
+    print("SHARDED_ARENA_CHECK_OK")
+
+
+if __name__ == "__main__":
+    main()

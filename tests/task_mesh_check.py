@@ -7,16 +7,9 @@ process.)
 
 Run directly:  python tests/task_mesh_check.py
 """
-import os
+from _subprocess import setup_virtual_devices
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=2")
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
-
-import sys
-from pathlib import Path
-
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+setup_virtual_devices(2)
 
 import numpy as np
 

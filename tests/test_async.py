@@ -23,8 +23,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from pathlib import Path
-
 from repro.data import partition, synthetic
 from repro.data.partition import sample_staleness
 from repro.fed import aggregation, runtime
@@ -374,13 +372,8 @@ def test_explicit_trace_and_validation(small_setup):
 # ---------------------------------------------------------------------------
 
 def _run_check(args):
-    import subprocess
-    import sys as _sys
-    script = Path(__file__).parent / "async_engine_check.py"
-    out = subprocess.run([_sys.executable, str(script), *args],
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stdout + out.stderr
-    assert "ASYNC_CHECK_OK" in out.stdout
+    from _subprocess import run_check
+    run_check("async_engine_check.py", *args, marker="ASYNC_CHECK_OK")
 
 
 def test_async_zero_trace_pinned_single_device():

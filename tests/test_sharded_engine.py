@@ -3,18 +3,11 @@
 Runs in a subprocess because the 2-device host-platform override must be
 set before jax initializes (the main test process uses 1 device).
 """
-import subprocess
-import sys
-from pathlib import Path
-
 import pytest
+
+from _subprocess import run_check
 
 
 @pytest.mark.slow
 def test_sharded_engine_matches_single_device():
-    script = Path(__file__).parent / "sharded_engine_check.py"
-    out = subprocess.run(
-        [sys.executable, str(script)], capture_output=True, text=True,
-        timeout=900)
-    assert out.returncode == 0, out.stdout + out.stderr
-    assert "SHARDED_ENGINE_CHECK_OK" in out.stdout
+    run_check("sharded_engine_check.py", marker="SHARDED_ENGINE_CHECK_OK")

@@ -9,20 +9,13 @@ from the pre-refactor engine, compared via ``float.hex()`` (exact, not
 approximate).  See ``tests/task_bitexact_check.py`` for the case list
 and the (deliberate) regeneration procedure.
 """
-import subprocess
-import sys
-from pathlib import Path
-
 import pytest
 
-SCRIPT = Path(__file__).parent / "task_bitexact_check.py"
+from _subprocess import run_check
 
 
 def _run(args):
-    out = subprocess.run([sys.executable, str(SCRIPT), *args],
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stdout + out.stderr
-    assert "BITEXACT_CHECK_OK" in out.stdout
+    run_check("task_bitexact_check.py", *args, marker="BITEXACT_CHECK_OK")
 
 
 def test_mlp_trajectories_bitexact_single_device():

@@ -2,12 +2,10 @@
 stack, task-declared metric schemas, and the engine's task-genericity
 contracts (cache-friendly task equality, MLP default back-compat).
 """
-import subprocess
-import sys
-from pathlib import Path
-
 import numpy as np
 import pytest
+
+from _subprocess import run_check
 
 from repro.core import protocol, ssca
 from repro.core.schedules import paper_schedules
@@ -137,8 +135,4 @@ def test_lm_tasks_on_client_mesh_match_single_device():
     """Two non-MLP tasks × secure aggregation × qsgd × 2-device client
     mesh == single-device, bit for bit (subprocess: the virtual-device
     override must precede jax init)."""
-    script = Path(__file__).parent / "task_mesh_check.py"
-    out = subprocess.run([sys.executable, str(script)],
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stdout + out.stderr
-    assert "TASK_MESH_CHECK_OK" in out.stdout
+    run_check("task_mesh_check.py", marker="TASK_MESH_CHECK_OK")
