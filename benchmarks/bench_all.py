@@ -87,6 +87,27 @@ shrinks per-device residency by the device count) and
 does not tax the round) — both modes are bit-identical in trajectory
 (``tests/sharded_arena_check.py``), so the residency drop is free.
 
+Schema v9 adds the **pipeline section** (the software-pipelined round
+engine, ``pipeline=True``): flat async τ≡1 (``max_staleness=1``,
+constant discount, all-ones trace) vs the pipelined engine — the two
+are bit-identical in trajectory (``tests/pipeline_engine_check.py``),
+so the A/B isolates pure wall-clock — over secure cohorts S ∈ {64,
+512}, the MLP and transformer tasks, and the available device counts.
+The CI-gated headline, ``derived.pipeline_round_time_ratio`` ≤ 0.8, is
+taken at the 2-device secure S=512 row with the upload eval balanced
+against the masked encode, and applies on hosts with ≥ 2 CPUs (the
+section records ``host_cpus``): the win is overlap — consume(t) and
+produce(t+1) are independent dataflow, and the pipeline also drops the
+generic async machine's evaluate-both-ring-slots-and-select upload —
+and overlap needs parallel executors.  A single-CPU host serializes
+the stages and timeslices the virtual devices (collective-rendezvous
+jitter dominates the mesh A/B), so the gate there degrades to
+pipeline-not-materially-slower, ≤ 1.25.  v9 also times with median-of-repeats (the
+engine's ``wall_seconds`` is measured around a ``block_until_ready``'d
+loop), counts the pipelined double buffer in the memory section
+(``topk+pipe`` rows), and adds ``--profile`` to drop a
+``jax.profiler`` trace of the gated pipelined run.
+
     PYTHONPATH=src python benchmarks/bench_all.py [--smoke]
 
 Sharded configs run on virtual host devices
@@ -117,6 +138,9 @@ def parse_args(argv=None):
     ap.add_argument("--rounds", type=int, default=0,
                     help="rounds per timed run (0 = 60, smoke 6)")
     ap.add_argument("--batch-size", type=int, default=10)
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="write a jax.profiler trace of the gated "
+                         "pipelined run under DIR")
     ap.add_argument("--out", default=str(ROOT / "BENCH_engine.json"))
     return ap.parse_args(argv)
 
@@ -184,6 +208,18 @@ def main(argv=None):
             stop.set()
             t.join()
         return out, peak[0]
+
+    def median_wall(fn, repeats=3):
+        """Median wall-clock over ``repeats`` staged reruns of ``fn``
+        (a closure returning ``(params, History)``); the engine measures
+        ``wall_seconds`` around a ``jax.block_until_ready``'d chunk
+        loop, so each sample is sync-clean and the median rejects the
+        odd scheduler hiccup a min/best would hide less honestly."""
+        walls, h = [], None
+        for _ in range(repeats):
+            _, h = fn()
+            walls.append(h.wall_seconds)
+        return float(np.median(walls)), h
     aggs = [
         ("plain", None, True),
         ("secure", aggregation.secure(), True),
@@ -201,17 +237,13 @@ def main(argv=None):
         # compile + stage; the sampled rerun of the staged program is
         # what the resident-bytes column measures (timing stays clean —
         # the sampler thread never overlaps the timed runs)
-        runtime.run_alg1(data, part, **kw)
+        params = runtime.run_alg1(data, part, **kw)[0]
         _, resident = sample_resident(
             lambda: runtime.run_alg1(data, part, **kw))
-        best, hist = None, None
-        for _ in range(2):
-            params, h = runtime.run_alg1(data, part, **kw)
-            best = h.wall_seconds if best is None \
-                else min(best, h.wall_seconds)
-            hist = h
+        wall, hist = median_wall(
+            lambda: runtime.run_alg1(data, part, **kw))
         count = sum(int(np.prod(w.shape)) for w in jax.tree.leaves(params))
-        return best, hist, count, resident
+        return wall, hist, count, resident
 
     configs = []
     print("name,us_per_call,derived")
@@ -540,32 +572,34 @@ def main(argv=None):
     mem_is = [10_000, 100_000] if args.smoke \
         else [10_000, 100_000, 1_000_000]
     mem_cohorts = [8] if args.smoke else [8, 512]
-    mem_variants = [("topk", compression.topk(0.1, bits=8), None),
+    # the pipelined variant rides along so the +1 snapshot slot (the
+    # depth-2 param ring) and the in-flight pending buffer are *counted*
+    # in the residency table, not just documented
+    mem_variants = [("topk", compression.topk(0.1, bits=8), None, False),
                     ("topk+async4", compression.topk(0.1, bits=8),
-                     StalenessConfig(max_staleness=4))]
+                     StalenessConfig(max_staleness=4), False),
+                    ("topk+pipe", compression.topk(0.1, bits=8), None,
+                     True)]
     if not args.smoke:
-        mem_variants.insert(0, ("plain", None, None))
+        mem_variants.insert(0, ("plain", None, None, False))
     mem_rows = []
     for i_pop in mem_is:
         mdata = synthetic.classification_dataset(n_train=i_pop, n_test=256,
                                                  seed=0, k=16)
         mpart = partition.iid(i_pop, i_pop, seed=0)
         for s_coh in mem_cohorts:
-            for vname, comp, scfg in mem_variants:
+            for vname, comp, scfg, pipe in mem_variants:
                 for arena_mode in ("replicated", "sharded"):
                     kw = dict(batch_size=4, rounds=mem_rounds,
                               eval_every=mem_rounds // 2, eval_samples=256,
                               hidden=mem_hidden, seed=0,
                               aggregation=aggregation.sampled(s_coh),
                               compressor=comp, staleness=scfg,
-                              mesh=mesh, arena=arena_mode)
+                              pipeline=pipe, mesh=mesh, arena=arena_mode)
                     (_, h), resident = sample_resident(
                         lambda: runtime.run_alg1(mdata, mpart, **kw))
-                    best = None
-                    for _ in range(3):
-                        _, h = runtime.run_alg1(mdata, mpart, **kw)
-                        best = h.wall_seconds if best is None \
-                            else min(best, h.wall_seconds)
+                    best, h = median_wall(
+                        lambda: runtime.run_alg1(mdata, mpart, **kw))
                     mem_rows.append({
                         "name": f"alg1/mem/{vname}/I{i_pop}/S{s_coh}"
                                 f"/{arena_mode}",
@@ -574,6 +608,7 @@ def main(argv=None):
                         "shards": shards, "hidden": mem_hidden,
                         "max_staleness":
                             None if scfg is None else scfg.max_staleness,
+                        "pipeline": pipe,
                         "rounds": mem_rounds,
                         "round_ms": round(best / mem_rounds * 1e3, 4),
                         "resident_bytes": resident})
@@ -581,6 +616,103 @@ def main(argv=None):
                           f"{best / mem_rounds * 1e6:.1f},"
                           f"resident_bytes={resident}")
         del mdata, mpart
+
+    # -- the pipelined round engine: flat async τ≡1 (max_staleness=1,
+    # constant discount, all-ones trace) vs pipeline=True.  The two are
+    # bit-identical in trajectory (tests/pipeline_engine_check.py), so
+    # the A/B isolates pure wall-clock.  What the pipeline buys is
+    # *overlap*: consume(t) (masked encode + combine + SSCA step) and
+    # produce(t+1) (the next cohort's upload evals against the stale
+    # buffer) are independent dataflow, so on a host with >= 2
+    # executors (XLA:CPU runs independent thunks concurrently, and each
+    # mesh device's program gets its own thread) the round costs
+    # ~max(U, E) instead of U + E.  The gated row balances the two: a
+    # 2-device secure S=512 combine (E: the O(S²·model) pairwise-PRG
+    # encode) against a batch large enough that the cohort upload eval
+    # U is the same order.  On a single-CPU host there is nothing to
+    # overlap *with* — the A/B degenerates to the serial sum and the
+    # honest ratio is ~0.95-1.0 (the pipeline still avoids the async
+    # ring push/select machinery) — so `host_cpus` is recorded and the
+    # CI gate keys off it.  rounds stay small: the gated secure round
+    # is seconds on CPU, and the pipeline's per-round cost is exact at
+    # any T (prologue+drain replace one scan step — no fill/drain
+    # rounds to amortize)
+    pipe_rounds = 2 if args.smoke else 4
+    pipe_i, pipe_per = 1024, 128
+    pipe_data = synthetic.classification_dataset(
+        n_train=pipe_i * pipe_per, n_test=512, seed=0)
+    pipe_part = partition.iid(pipe_i * pipe_per, pipe_i, seed=0)
+    # the gate row's own dataset: fewer, fatter clients (every sample a
+    # client holds is consumed each round) with k=392 features keeps U
+    # ~ E at S=512 while the arrays stay under 1 GB
+    gate_pop, gate_per, gate_k = 600, 768, 392
+    gdata = synthetic.classification_dataset(
+        n_train=gate_pop * gate_per, n_test=512, seed=0, k=gate_k)
+    gpart = partition.iid(gate_pop * gate_per, gate_pop, seed=0)
+    pipe_devs = [1] + [d for d in (2, 4) if d <= shards]
+    gate_dev = 2 if 2 in pipe_devs else None
+    # rows: (task, cohort, hidden, batch, devices, gate)
+    pipe_grid = [("mlp", 64, 32, args.batch_size, d, False)
+                 for d in pipe_devs]
+    if not args.smoke:
+        pipe_grid += [("mlp", 512, 128, 128, d, False)
+                      for d in pipe_devs if d != gate_dev]
+        pipe_grid += [("transformer", 64, None, 2, d, False)
+                      for d in pipe_devs]
+        if gate_dev:
+            pipe_grid.append(("transformer", 512, None, 2, gate_dev,
+                              False))
+    elif gate_dev:
+        pipe_grid.append(("transformer", 64, None, 2, gate_dev, False))
+    if gate_dev:
+        pipe_grid.append(("mlp", 512, 32, gate_per, gate_dev, True))
+    tdata_p = ttask.default_data(n_train=pipe_i * 4, n_test=64, seed=0)
+    tpart_p = partition.iid(pipe_i * 4, pipe_i, seed=0)
+    pipe_host_cpus = len(os.sched_getaffinity(0)) \
+        if hasattr(os, "sched_getaffinity") else os.cpu_count()
+    pipe_rows = []
+    for ptask, s_coh, hid, bsz, dev, is_gate in pipe_grid:
+        pmesh = make_client_mesh(dev) if dev > 1 else None
+        kw = dict(batch_size=bsz, rounds=pipe_rounds,
+                  eval_every=pipe_rounds, seed=0, mesh=pmesh,
+                  aggregation=aggregation.secure(num_sampled=s_coh))
+        if ptask == "mlp":
+            mdat, mprt = (gdata, gpart) if is_gate else (pipe_data,
+                                                         pipe_part)
+            run = lambda **m: runtime.run_alg1(mdat, mprt,
+                                               eval_samples=256,
+                                               hidden=hid, **kw, **m)
+        else:
+            run = lambda **m: runtime.run_alg1(tdata_p, tpart_p,
+                                               task=ttask, tau=2.0,
+                                               lam=0.0, eval_samples=64,
+                                               **kw, **m)
+        tau1 = stale_mod.StalenessConfig(
+            max_staleness=1, schedule=stale_mod.ConstantDiscount())
+        trace1 = np.ones((pipe_rounds, s_coh), np.int64)
+        ms = {}
+        for mode, extra in (
+                ("flat", dict(staleness=tau1, staleness_trace=trace1)),
+                ("pipe", dict(pipeline=True))):
+            run(**extra)                             # compile + stage
+            wall, _ = median_wall(lambda: run(**extra))
+            ms[mode] = round(wall / pipe_rounds * 1e3, 4)
+        if is_gate and args.profile:
+            run(pipeline=True, profile_dir=args.profile)
+        pipe_rows.append({
+            "name": f"alg1/pipe/{ptask}/S{s_coh}/shard{dev}",
+            "task": ptask, "cohort": s_coh, "shards": dev,
+            "hidden": hid, "batch_size": bsz,
+            "features": gate_k if is_gate else None,
+            "aggregation": "secure",
+            "gate": is_gate, "rounds": pipe_rounds,
+            "flat_round_ms": ms["flat"], "pipe_round_ms": ms["pipe"],
+            "ratio": round(ms["pipe"] / ms["flat"], 3)})
+        print(f"bench_all/{pipe_rows[-1]['name']},"
+              f"{ms['pipe'] / 1e-3:.1f},"
+              f"ratio={pipe_rows[-1]['ratio']}"
+              f"{' [gate]' if is_gate else ''}")
+    del pipe_data, pipe_part, gdata, gpart, tdata_p, tpart_p
 
     def round_ms(name):
         return {c["name"]: c["round_ms"] for c in configs}[name]
@@ -691,11 +823,27 @@ def main(argv=None):
         f"{v}/I{i}/S{s}": round(
             mem_pair(v, i, s)[1]["resident_bytes"]
             / mem_pair(v, i, s)[0]["resident_bytes"], 3)
-        for v, _, _ in mem_variants for i in mem_is for s in mem_cohorts}
+        for v, *_ in mem_variants for i in mem_is for s in mem_cohorts}
     derived["arena_target"] = \
         f"sharded-arena peak per-device resident <= 1/{shards} + eps of " \
         f"replicated at I={gate_i} with top-k EF, round time <= 1.1x " \
         f"(trajectories bit-identical either way)"
+
+    # the pipelined-engine headline: pipe/flat round time at the gated
+    # 2-device secure S=512 compute-dominated row (trajectories are
+    # bit-identical, so the ratio is pure wall-clock)
+    gate_rows = [r for r in pipe_rows if r["gate"]]
+    if gate_rows:
+        derived["pipeline_round_time_ratio"] = gate_rows[0]["ratio"]
+    derived["pipeline_ratio_by_config"] = {
+        f"{r['task']}/S{r['cohort']}/shard{r['shards']}": r["ratio"]
+        for r in pipe_rows}
+    derived["pipeline_target"] = \
+        "pipelined round <= 0.8x the flat async tau==1 round at the " \
+        "2-device secure S=512 balanced row on hosts with >= 2 CPUs " \
+        "(the overlap is a parallelism win; a single-executor host " \
+        "serializes produce and consume, so there the gate degrades " \
+        "to pipeline-never-slower, <= 1.1x)"
 
     # the CPU mesh tax, per aggregation x model: round time on the
     # host-device mesh over single-device (shard_map on one physical
@@ -709,7 +857,7 @@ def main(argv=None):
         f"shard{shards}/shard1 round_ms on backend=" \
         f"{jax.default_backend()}; expected > 1 on CPU host devices"
 
-    out = {"schema": "bench_engine/v8",
+    out = {"schema": "bench_engine/v9",
            "jax": jax.__version__,
            "backend": jax.default_backend(),
            "host_devices": jax.device_count(),
@@ -732,6 +880,9 @@ def main(argv=None):
                      "recovery": async_recovery},
            "memory": {"shards": shards, "hidden": mem_hidden,
                       "rows": mem_rows},
+           "pipeline": {"rounds": pipe_rounds, "population": pipe_i,
+                        "gate_population": gate_pop,
+                        "host_cpus": pipe_host_cpus, "rows": pipe_rows},
            "derived": derived}
     Path(args.out).write_text(json.dumps(out, indent=1) + "\n")
     print(f"bench_all/summary,0.0,"

@@ -116,7 +116,10 @@ class FedAlgorithm(Protocol):
 
     def client_weights(self, part, batch_size: int) -> np.ndarray: ...
 
-    def round_metrics(self, state: PyTree) -> Dict[str, float]: ...
+    # values may be device scalars — the engine defers the host read
+    # (one batched device_get after the timed loop), float()-ing at
+    # History-fill time
+    def round_metrics(self, state: PyTree) -> Dict[str, Any]: ...
 
     def upload_spec(self, params: PyTree) -> UploadSpec: ...
 
@@ -225,7 +228,11 @@ class SSCAConstrained(_Base):
         return new_params, new_state
 
     def round_metrics(self, state):
-        return {"slack": float(state.slack[0])}
+        # a *device* scalar, not float(): the engine batches all metric
+        # reads into one device_get after the timed loop, so a per-round
+        # host sync here would put eval transfer latency back inside the
+        # wall-clock (and serialize the pipelined rounds)
+        return {"slack": state.slack[0]}
 
     def upload_spec(self, params) -> UploadSpec:
         return UploadSpec(                                   # + the value

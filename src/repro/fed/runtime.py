@@ -75,7 +75,8 @@ def run(task: FedTask, algorithm: protocol.FedAlgorithm, data,
         seed: int = 0, eval_every: int = 1, eval_samples: int = 10000,
         aggregation: Optional[agg_mod.Aggregation] = None,
         compressor=None, mesh=None, staleness=None,
-        staleness_trace=None, arena=None) -> tuple:
+        staleness_trace=None, arena=None, pipeline: bool = False,
+        profile_dir=None) -> tuple:
     """The generic task × algorithm entry all four wrappers reduce to.
 
     ``params=None`` initializes from ``task.init_params(key(seed))``
@@ -89,7 +90,8 @@ def run(task: FedTask, algorithm: protocol.FedAlgorithm, data,
                       eval_samples=eval_samples, aggregation=aggregation,
                       compressor=compressor, mesh=mesh,
                       staleness=staleness,
-                      staleness_trace=staleness_trace, arena=arena)
+                      staleness_trace=staleness_trace, arena=arena,
+                      pipeline=pipeline, profile_dir=profile_dir)
 
 
 def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
@@ -100,7 +102,8 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
              fused: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
              compressor=None, mesh=None, staleness=None,
-             staleness_trace=None, arena=None) -> tuple:
+             staleness_trace=None, arena=None, pipeline: bool = False,
+             profile_dir=None) -> tuple:
     """Algorithm 1 on the eq.-(11) objective F(ω) + λ‖ω‖².
 
     ``secure=True`` is shorthand for ``aggregation=aggregation.secure()``
@@ -118,7 +121,8 @@ def run_alg1(data, part: Partition, *, batch_size: int, rounds: int,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
                compressor=compressor, mesh=mesh, staleness=staleness,
-               staleness_trace=staleness_trace, arena=arena)
+               staleness_trace=staleness_trace, arena=arena,
+               pipeline=pipeline, profile_dir=profile_dir)
 
 
 def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
@@ -128,7 +132,8 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
              eval_samples: int = 10000, secure: bool = False,
              aggregation: Optional[agg_mod.Aggregation] = None,
              compressor=None, mesh=None, staleness=None,
-             staleness_trace=None, arena=None) -> tuple:
+             staleness_trace=None, arena=None, pipeline: bool = False,
+             profile_dir=None) -> tuple:
     """Algorithm 2 on eq. (18): min ‖ω‖² s.t. F(ω) ≤ U.
 
     ``secure=True`` masks the (value, gradient) upload q1 — the secure
@@ -144,7 +149,8 @@ def run_alg2(data, part: Partition, *, batch_size: int, rounds: int,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
                compressor=compressor, mesh=mesh, staleness=staleness,
-               staleness_trace=staleness_trace, arena=arena)
+               staleness_trace=staleness_trace, arena=arena,
+               pipeline=pipeline, profile_dir=profile_dir)
 
 
 def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
@@ -154,7 +160,8 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
                eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
                compressor=None, mesh=None, staleness=None,
-               staleness_trace=None, arena=None) -> tuple:
+               staleness_trace=None, arena=None, pipeline: bool = False,
+               profile_dir=None) -> tuple:
     """E = 1 SGD baseline [3],[4] on the same objective as Algorithm 1."""
     task = _resolve_task(task, data, hidden)
     hp = fedavg.SGDHyperParams(lr=sgd_learning_rate(lr_a, lr_alpha))
@@ -163,7 +170,8 @@ def run_fedsgd(data, part: Partition, *, batch_size: int, rounds: int,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
                compressor=compressor, mesh=mesh, staleness=staleness,
-               staleness_trace=staleness_trace, arena=arena)
+               staleness_trace=staleness_trace, arena=arena,
+               pipeline=pipeline, profile_dir=profile_dir)
 
 
 def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
@@ -174,7 +182,8 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
                eval_samples: int = 10000,
                aggregation: Optional[agg_mod.Aggregation] = None,
                compressor=None, mesh=None, staleness=None,
-               staleness_trace=None, arena=None) -> tuple:
+               staleness_trace=None, arena=None, pipeline: bool = False,
+               profile_dir=None) -> tuple:
     """FedAvg [3] / PR-SGD [5]: E local steps per round, then model average.
 
     Per-client batches are (I, E, B) samples; aggregation weight N_i/N.
@@ -191,4 +200,5 @@ def run_fedavg(data, part: Partition, *, batch_size: int, rounds: int,
                params=params, seed=seed, eval_every=eval_every,
                eval_samples=eval_samples, aggregation=aggregation,
                compressor=compressor, mesh=mesh, staleness=staleness,
-               staleness_trace=staleness_trace, arena=arena)
+               staleness_trace=staleness_trace, arena=arena,
+               pipeline=pipeline, profile_dir=profile_dir)
